@@ -1,0 +1,62 @@
+"""Paper Fig. 10 analogue: roofline placement of the top kernel.
+
+The paper uses Intel Advisor on dual Gold-6140; here the roofline terms
+come from the dry-run's compiled artifacts (launch/roofline.py, TPU v5e
+constants) plus an analytic arithmetic-intensity model of the kernels:
+
+    AI(subline)  ~ flops / bytes
+      flops/update ~ 8   (two mixes + weight + accumulate)
+      bytes/update ~ (4 + 1/nb)*4 / reuse  — the paper's N_mem model
+
+which places the kernel in the bandwidth-bound region, matching the
+paper's observation that the optimized kernel sits between the L2 and L3
+bandwidth ceilings on CPUs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run():
+    # analytic AI of the kernel family (per voxel update)
+    for name, flops_per_update, bytes_per_update in [
+        ("baseline", 18.0, (4 + 1.0) * 4),       # nb=1: vol rw each proj
+        ("subline_nb8", 8.0, (4 + 1 / 8) * 4),
+        ("subline_nb32", 8.0, (4 + 1 / 32) * 4),
+        ("pallas_output_stationary", 8.0, 4.0 * 4),  # vol written once
+    ]:
+        ai = flops_per_update / bytes_per_update
+        ridge = PEAK_FLOPS / HBM_BW
+        bound = "memory" if ai < ridge else "compute"
+        attainable = min(PEAK_FLOPS, ai * HBM_BW)
+        emit(f"roofline/{name}", 0.0,
+             f"AI={ai:.3f} bound={bound} "
+             f"attainable_TFLOPs={attainable/1e12:.2f}")
+
+    # measured placement from dry-run artifacts
+    for fn in sorted(glob.glob("artifacts/dryrun/ct-backproject__*"
+                               "__pod16x16.json")):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        f_dev = rec["cost"]["flops_per_device"]
+        b_dev = rec["cost"]["bytes_per_device"]
+        ai = f_dev / max(b_dev, 1.0)
+        emit(f"roofline/dryrun_{rec['shape']}", 0.0,
+             f"AI={ai:.3f} flops_dev={f_dev:.2e} bytes_dev={b_dev:.2e}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing, GUPS, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def gups(geom, t: float, n_proj: int | None = None) -> float:
+    """Paper §2.3: nx*ny*nz*np / t / 1e9 (giga updates per second)."""
+    return geom.voxel_updates(n_proj) / t / 1e9
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,37 @@
+"""Iterative reconstruction (SART) built on the optimized back-projector —
+the paper's motivating use case where BP is called repeatedly and
+dominates runtime.
+
+    PYTHONPATH=src python examples/iterative_recon.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import ball_phantom, standard_geometry
+from repro.core.fdk import sart_step
+from repro.core.forward import forward_project
+
+
+def main():
+    n = 20
+    geom = standard_geometry(n=n, n_det=32, n_proj=24)
+    phantom = jnp.asarray(ball_phantom(n, radius=0.55))
+    projs = forward_project(phantom, geom, oversample=2.0)
+
+    vol = jnp.zeros(geom.volume_shape_zyx, jnp.float32)
+    for it in range(6):
+        vol = sart_step(vol, projs, geom, relax=0.6, nb=8,
+                        variant="algorithm1_mp", oversample=1.0)
+        est = forward_project(vol, geom, oversample=1.0)
+        resid = float(jnp.sqrt(jnp.mean((est - projs) ** 2)))
+        err = float(jnp.sqrt(jnp.mean((vol - phantom) ** 2)))
+        print(f"iter {it + 1}: projection residual {resid:8.3f}   "
+              f"volume rmse {err:.4f}")
+    interior = np.asarray(vol)[n // 2, n // 2, n // 2]
+    print(f"center voxel: {interior:.2f} (truth 1.0)")
+
+
+if __name__ == "__main__":
+    main()

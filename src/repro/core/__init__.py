@@ -1,0 +1,22 @@
+"""Core library: the paper's back-projection algorithms and CT pipeline."""
+
+from .geometry import (  # noqa: F401
+    CTGeometry,
+    projection_matrices,
+    projection_matrix,
+    standard_geometry,
+)
+from .baseline import backproject_rtk, bilinear_gather  # noqa: F401
+from .backproject import (  # noqa: F401
+    bp_share,
+    bp_subline,
+    bp_subline_symmetry_batch,
+    bp_symmetry,
+    bp_transpose,
+    transpose_projections,
+    volume_to_native,
+    volume_to_transposed,
+)
+from .variants import VARIANTS, get_variant  # noqa: F401
+from .fdk import fdk_reconstruct  # noqa: F401
+from .phantom import ball_phantom, shepp_logan_3d  # noqa: F401

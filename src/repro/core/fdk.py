@@ -1,0 +1,60 @@
+"""End-to-end FDK reconstruction pipeline (filter -> back-project).
+
+This is the paper's application context: FDK calls back-projection once;
+iterative algorithms (SART/MLEM/...) call forward+back projection per
+iteration — either way back-projection dominates, which is why the paper
+optimizes it. The pipeline is variant-parameterized so every kernel in
+``core.variants`` (and the Pallas kernels) is drop-in.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import backproject as bp
+from .filtering import fdk_preweight_and_filter
+from .geometry import CTGeometry, projection_matrices
+from .variants import get_variant
+
+
+def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
+                    variant: str = "algorithm1_mp", *,
+                    nb: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw)."""
+    filtered = fdk_preweight_and_filter(projections, geom)
+    mats = projection_matrices(geom)
+    img_t = bp.transpose_projections(filtered)
+    fn = get_variant(variant)
+    vol_t = fn(img_t, mats, geom.volume_shape_xyz, nb=nb, interpret=interpret)
+    return bp.volume_to_native(vol_t)
+
+
+def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
+              geom: CTGeometry, *, relax: float = 0.25,
+              variant: str = "algorithm1_mp", nb: int = 8,
+              oversample: float = 1.0) -> jnp.ndarray:
+    """One SART update (demonstrates the paper's iterative-recon use).
+
+    Standard SART (Andersen & Kak):
+
+        x += relax * (1 / BP(1)) * BP( (P - FP(x)) / FP(1_vol) )
+
+    FP(1_vol) are the per-ray intersection lengths (projection-domain
+    row sums of the system matrix); BP(1) the voxel-domain column sums.
+    Both normalizers reuse the same forward/back projection kernels.
+    """
+    from .forward import forward_project
+
+    mats = projection_matrices(geom)
+    est = forward_project(vol_zyx, geom, oversample=oversample)
+    ray_len = forward_project(jnp.ones_like(vol_zyx), geom,
+                              oversample=oversample)
+    resid = (projections - est) / jnp.maximum(ray_len, 1e-3)
+    img_t = bp.transpose_projections(resid)
+    fn = get_variant(variant)
+    upd_t = fn(img_t, mats, geom.volume_shape_xyz, nb=nb)
+    ones_t = bp.transpose_projections(jnp.ones_like(projections))
+    norm_t = fn(ones_t, mats, geom.volume_shape_xyz, nb=nb)
+    upd = bp.volume_to_native(upd_t)
+    norm = bp.volume_to_native(norm_t)
+    return vol_zyx + relax * upd / jnp.maximum(norm, 1e-12)

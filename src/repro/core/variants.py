@@ -1,0 +1,114 @@
+"""Registry of back-projection kernel variants (paper Table 2).
+
+Maps variant names to callables with the uniform signature
+
+    fn(img_t, mat, vol_shape_xyz, **opts) -> vol_t (nx, ny, nz)
+
+operating on transposed layouts. The RTK baseline is exposed through the
+same signature by transposing at the edges (the transposes are part of the
+measured baseline cost in RTK's favor: the paper also counts its own
+transposition as marginal, §3.1.1).
+
+Names follow the paper (Table 2), with `_mp` ~ pure-JAX (the auto-vectorized
+path) and `_pl` ~ Pallas kernels (the explicitly tiled path):
+
+    baseline        RTK Listing 1 (native layouts inside)
+    transpose_mp    O1
+    share_mp        O1+O2
+    symmetry_mp     O1+O2+O3
+    subline_mp      O1+O2+O4
+    algorithm1_mp   O1..O5 (paper Algorithm 1; nb batching)
+    subline_pl      Pallas: O1..O5 + O6 (pipelined prefetch)  [kernels/]
+    onehot_pl       Pallas: beyond-paper MXU interpolation    [kernels/]
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from . import backproject as bp
+from . import baseline as bl
+
+
+def _baseline_adapter(img_t, mat, vol_shape_xyz, **_):
+    img = bp.transpose_projections(img_t)  # back to (np, nh, nw)
+    ni, nj, nk = vol_shape_xyz
+    vol = bl.backproject_rtk(img, mat, (nk, nj, ni))
+    return bp.volume_to_transposed(vol)
+
+
+def _transpose(img_t, mat, vol_shape_xyz, **_):
+    return bp.bp_transpose(img_t, mat, vol_shape_xyz)
+
+
+def _share(img_t, mat, vol_shape_xyz, **_):
+    return bp.bp_share(img_t, mat, vol_shape_xyz)
+
+
+def _symmetry(img_t, mat, vol_shape_xyz, **_):
+    return bp.bp_symmetry(img_t, mat, vol_shape_xyz)
+
+
+def _subline(img_t, mat, vol_shape_xyz, **_):
+    return bp.bp_subline(img_t, mat, vol_shape_xyz)
+
+
+def _algorithm1(img_t, mat, vol_shape_xyz, nb: int = 8, **_):
+    return bp.bp_subline_symmetry_batch(img_t, mat, vol_shape_xyz, nb=nb)
+
+
+def _subline_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
+                    interpret: bool = True, **_):
+    from repro.kernels import ops
+    return ops.backproject_subline(img_t, mat, vol_shape_xyz, nb=nb,
+                                   interpret=interpret)
+
+
+def _onehot_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
+                   interpret: bool = True, **_):
+    from repro.kernels import ops
+    return ops.backproject_onehot(img_t, mat, vol_shape_xyz, nb=nb,
+                                  interpret=interpret)
+
+
+def _banded_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
+                   interpret: bool = True, **_):
+    from repro.kernels import ops
+    return ops.backproject_banded(img_t, mat, vol_shape_xyz, nb=nb,
+                                  interpret=interpret)
+
+
+VARIANTS: Dict[str, Callable] = {
+    "baseline": _baseline_adapter,
+    "transpose_mp": _transpose,
+    "share_mp": _share,
+    "symmetry_mp": _symmetry,
+    "subline_mp": _subline,
+    "algorithm1_mp": _algorithm1,
+    "subline_pl": _subline_pallas,
+    "onehot_pl": _onehot_pallas,
+    "banded_pl": _banded_pallas,
+}
+
+# Which paper optimizations each variant carries (paper Table 2 columns).
+OPTIMIZATIONS: Dict[str, tuple] = {
+    "baseline": (),
+    "transpose_mp": ("transpose",),
+    "share_mp": ("transpose", "share"),
+    "symmetry_mp": ("transpose", "share", "symmetry"),
+    "subline_mp": ("transpose", "share", "subline"),
+    "algorithm1_mp": ("transpose", "share", "symmetry", "subline", "batch"),
+    "subline_pl": ("transpose", "share", "symmetry", "subline", "batch",
+                   "localmem", "prefetch"),
+    "onehot_pl": ("transpose", "share", "symmetry", "subline", "batch",
+                  "localmem", "prefetch", "mxu-interp"),
+    "banded_pl": ("transpose", "share", "symmetry", "subline", "batch",
+                  "localmem", "prefetch", "banded-prefetch"),
+}
+
+
+def get_variant(name: str) -> Callable:
+    if name not in VARIANTS:
+        raise KeyError(f"unknown back-projection variant {name!r}; "
+                       f"have {sorted(VARIANTS)}")
+    return VARIANTS[name]

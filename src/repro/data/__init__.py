@@ -1,0 +1,2 @@
+from .pipeline import CTProjectionSource, TokenPipeline  # noqa: F401
+from .tokenizer import ByteTokenizer  # noqa: F401

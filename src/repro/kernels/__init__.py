@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the paper's compute hot-spot: back-projection.
+# <name>.py = pl.pallas_call + BlockSpec; ops.py = jit'd wrappers;
+# ref.py = pure-jnp oracle used by tests/test_kernels.py.
+
+from .ops import (  # noqa: F401
+    backproject_banded,
+    backproject_onehot,
+    backproject_subline,
+)
+from .ref import backproject_ref  # noqa: F401

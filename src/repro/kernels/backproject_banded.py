@@ -1,0 +1,207 @@
+"""Pallas TPU kernel: banded, geometry-prefetched sub-line back-projection.
+
+Beyond-paper optimization C3 (EXPERIMENTS.md §Perf CT campaign). The
+output-stationary schedule of backproject_subline re-streams every full
+projection for every volume tile — at P10 scale that is PBs of HBM
+traffic. But a (BI, BJ) voxel tile only touches a NARROW BAND of detector
+columns per projection: x(i,j) = (m00 i + m01 j + m03)/(m20 i + m21 j +
+m23) is a ratio of linear functions, so its extrema over the tile
+rectangle sit at the 4 corners — the needed band is known on the host
+from the matrices alone.
+
+Realization:
+  * the projections are re-laid-out ONCE into 2x-overlapping bands
+    img_b[s, b] = img_t[s, b*BW : b*BW + 2*BW, :]  (2x img memory, read
+    O(T) times — amortized immediately);
+  * a scalar-prefetch array band[s, ti, tj] = floor(xmin/BW) drives the
+    BlockSpec index_map, so the pipeline DMAs exactly one (2*BW, nh) band
+    per (tile, projection) — the paper's locality insight promoted into
+    the prefetch engine (O6 with geometry awareness);
+  * coverage is guaranteed when max tile x-span + 2 <= BW (checked by the
+    wrapper, which picks BW from the geometry).
+
+HBM projection traffic drops from T * np * nw * nh to
+T * np * 2*BW * nh  (nw/2BW fold; ~14x for P10 at BW=64).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backproject_subline import _line_scalars
+
+
+def band_layout(img_t: jnp.ndarray, bw: int):
+    """(np, nw, nh) -> overlapping bands (np, n_bands, 2*bw, nh)."""
+    n_proj, nw, nh = img_t.shape
+    n_bands = max(1, -(-nw // bw))
+    pad = n_bands * bw + bw - nw      # so band b slice [b*bw, b*bw+2bw) fits
+    imgp = jnp.pad(img_t, ((0, 0), (0, pad), (0, 0)))
+    idx = (jnp.arange(n_bands)[:, None] * bw
+           + jnp.arange(2 * bw)[None, :])            # (n_bands, 2bw)
+    return imgp[:, idx, :], n_bands                  # (np, nb, 2bw, nh)
+
+
+def tile_bands(mat: np.ndarray, ni: int, nj: int, BI: int, BJ: int,
+               bw: int, n_bands: int, nw: int):
+    """band[s, ti, tj] block index + the max span (for the BW check).
+
+    Corner evaluation is exact for z>0 (linear-fractional x over the
+    tile rectangle attains extrema at corners).
+    """
+    mat = np.asarray(mat, np.float64)
+    ti = np.arange(ni // BI)
+    tj = np.arange(nj // BJ)
+    i_lo, i_hi = ti * BI, ti * BI + (BI - 1)
+    j_lo, j_hi = tj * BJ, tj * BJ + (BJ - 1)
+    xs = []
+    for ic in (i_lo, i_hi):
+        for jc in (j_lo, j_hi):
+            i = ic[:, None, None]                    # (Ti,1,1)
+            j = jc[None, :, None]                    # (1,Tj,1)
+            m = mat[None, None]                      # (1,1,ns,3,4)
+            z = m[..., 2, 0] * i + m[..., 2, 1] * j + m[..., 2, 3]
+            x = (m[..., 0, 0] * i + m[..., 0, 1] * j
+                 + m[..., 0, 3]) / np.maximum(z, 1e-6)
+            xs.append(x)                             # (Ti,Tj,ns)
+    xs = np.stack(xs)                                # (4,Ti,Tj,ns)
+    xmin = np.clip(xs.min(0), 0, nw - 1)
+    xmax = np.clip(xs.max(0), 0, nw - 1)
+    span = float((xmax - xmin).max()) + 2.0
+    band = np.clip((xmin // bw).astype(np.int32), 0, n_bands - 1)
+    # (ns, Ti, Tj) layout for the prefetch array
+    return np.ascontiguousarray(np.transpose(band, (2, 0, 1))), span
+
+
+def _make_kernel(BI: int, BJ: int, nz: int, bw: int, nw: int, nh: int):
+    kh = nz // 2
+    khp = nz - kh
+    GJ = BJ // 8
+
+    def kernel(band_ref, mat_ref, img_ref, out_ref, smem_ref):
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+        s = pl.program_id(2)
+
+        @pl.when(s == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        col0 = band_ref[s, ti, tj] * bw           # global col of block[0]
+
+        for ii in range(BI):
+            i_g = ti * BI + ii
+            for jg in range(GJ):
+                f_list, w_list = [], []
+                for jj in range(8):
+                    j_g = tj * BJ + jg * 8 + jj
+                    f, w_eff, ixc, dx = _line_scalars(mat_ref, i_g, j_g,
+                                                      nw)
+                    loc = jnp.clip(ixc - col0, 0, 2 * bw - 2)
+                    # zero the line if the band misses (never happens
+                    # when the wrapper's span check passed; belt+braces)
+                    in_band = (ixc - col0 >= 0) & (ixc - col0 <= 2*bw - 2)
+                    w_eff = jnp.where(in_band, w_eff, 0.0)
+                    cols = img_ref[pl.ds(loc, 2), :]      # (2, nh)
+                    smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
+                    f_list.append(f)
+                    w_list.append(w_eff)
+                f_vec = jnp.stack(f_list).reshape(8, 1)
+                w_vec = jnp.stack(w_list).reshape(8, 1)
+                i_f = i_g.astype(jnp.float32)
+                j_base = (tj * BJ + jg * 8).astype(jnp.float32)
+                j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
+                j_vec = j_base + j_off
+                k = jax.lax.broadcasted_iota(jnp.float32, (8, khp), 1)
+                a = (mat_ref[1, 0] * i_f + mat_ref[1, 1] * j_vec
+                     + mat_ref[1, 3]) * f_vec
+                b = mat_ref[1, 2] * f_vec
+                y = a + b * k
+                sm = smem_ref[...]
+
+                def interp(yy):
+                    y0 = jnp.floor(yy)
+                    iy = y0.astype(jnp.int32)
+                    dy = yy - y0
+                    ok = (iy >= 0) & (iy <= nh - 2)
+                    iyc = jnp.clip(iy, 0, nh - 2)
+                    s0 = jnp.take_along_axis(sm, iyc, axis=1)
+                    s1 = jnp.take_along_axis(sm, iyc + 1, axis=1)
+                    v = s0 * (1.0 - dy) + s1 * dy
+                    return jnp.where(ok, v, 0.0)
+
+                lo = interp(y) * w_vec
+                y_m = (nh - 1.0) - y[:, :kh]
+                hi = interp(y_m) * w_vec
+                jlo = jg * 8
+                out_ref[ii, jlo:jlo + 8, :khp] += lo
+                out_ref[ii, jlo:jlo + 8, khp:] += hi[:, ::-1]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vol_shape_xyz", "block", "bw", "nw", "interpret"),
+)
+def _banded_call(img_b, mat, band, vol_shape_xyz, *, block, bw, nw,
+                 interpret):
+    n_proj = img_b.shape[0]
+    nh = img_b.shape[3]
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    # nw = TRUE detector width: the validity mask must not admit the
+    # zero-padded band tail (cols nw-1..) or edge columns leak into the
+    # interpolation.
+    kernel = _make_kernel(BI, BJ, nz, bw, nw, nh)
+    grid = (ni // BI, nj // BJ, n_proj)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 3, 4), lambda ti, tj, s, band: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, None, 2 * bw, nh),
+                         lambda ti, tj, s, band: (s, band[s, ti, tj],
+                                                  0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ, nz),
+                               lambda ti, tj, s, band: (ti, tj, 0)),
+        scratch_shapes=[pltpu.VMEM((8, nh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),
+        interpret=interpret,
+    )(band, mat.astype(jnp.float32), img_b.astype(jnp.float32))
+
+
+def backproject_banded(img_t: jnp.ndarray, mat: jnp.ndarray,
+                       vol_shape_xyz, *, block=(4, 8), bw: int = 32,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Banded back-projection. img_t (np, nw, nh); returns (ni, nj, nz).
+
+    Picks/validates the band width: requires max tile x-span + 2 <= bw
+    (doubling bw until it holds), then runs the scalar-prefetched kernel.
+    """
+    n_proj, nw, nh = img_t.shape
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    assert ni % BI == 0 and nj % BJ == 0 and BJ % 8 == 0
+    mat_np = np.asarray(mat)
+    while True:
+        n_bands = max(1, -(-nw // bw))
+        band, span = tile_bands(mat_np, ni, nj, BI, BJ, bw, n_bands, nw)
+        if span <= bw or bw >= nw:
+            break
+        bw *= 2
+    img_b, n_bands = band_layout(img_t, bw)
+    return _banded_call(img_b, mat, jnp.asarray(band), tuple(vol_shape_xyz),
+                        block=block, bw=bw, nw=nw, interpret=interpret)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: back-projection with MXU one-hot interpolation.
+
+Beyond-paper variant (DESIGN.md §2, assumption change #2). The paper's
+sub-line stage 2 is a per-point gather in the cache-resident sMem buffer —
+cheap on CPUs, but on TPU a dynamic gather along lanes serializes on the
+VPU. This kernel replaces the gather with a *sparse interpolation matrix
+contracted on the MXU*:
+
+    val[j, k] = sum_n A[j, k, n] * sMem[j, n]
+    A[j, k, n] = (1-dy) * [n == floor(y)] + dy * [n == floor(y)+1]
+
+A is built from broadcasted iotas (pure VPU compares, no gathers) and the
+contraction is a batched GEMV on the MXU. The trade: 2*kh*nh FLOPs per
+line instead of ~6*kh gather-ops — profitable when gather throughput,
+not FLOPs, is the bottleneck (roofline arithmetic in EXPERIMENTS.md §Perf
+compares both kernels on the same problem).
+
+Schedule, blocking, hoisting, symmetry and the sub-line stage 1 are
+identical to backproject_subline.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backproject_subline import _line_scalars
+
+
+def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int, k_chunk: int):
+    kh = nz // 2          # mirrored half
+    khp = nz - kh         # direct half (includes middle plane for odd nz)
+    GJ = BJ // 8
+
+    def kernel(mat_ref, img_ref, out_ref, smem_ref):
+        s = pl.program_id(2)
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+
+        @pl.when(s == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        n_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nh), 2)
+
+        for ii in range(BI):
+            i_g = ti * BI + ii
+            for jg in range(GJ):
+                f_list, w_list = [], []
+                for jj in range(8):
+                    j_g = tj * BJ + jg * 8 + jj
+                    f, w_eff, ixc, dx = _line_scalars(mat_ref, i_g, j_g, nw)
+                    cols = img_ref[pl.ds(ixc, 2), :]
+                    smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
+                    f_list.append(f)
+                    w_list.append(w_eff)
+                f_vec = jnp.stack(f_list).reshape(8, 1)
+                w_vec = jnp.stack(w_list).reshape(8, 1)
+                i_f = i_g.astype(jnp.float32)
+                j_base = (tj * BJ + jg * 8).astype(jnp.float32)
+                j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
+                j_vec = j_base + j_off
+                a = (mat_ref[1, 0] * i_f + mat_ref[1, 1] * j_vec
+                     + mat_ref[1, 3]) * f_vec
+                b = mat_ref[1, 2] * f_vec
+                sm = smem_ref[...]                              # (8, nh)
+
+                def interp_onehot(yy):
+                    """(8, kc) coords -> (8, kc) values via MXU contraction."""
+                    y0 = jnp.floor(yy)
+                    iy = y0.astype(jnp.int32)
+                    dy = yy - y0
+                    ok = (iy >= 0) & (iy <= nh - 2)
+                    iyc = jnp.clip(iy, 0, nh - 2)
+                    lo = (n_iota == iyc[..., None]).astype(jnp.float32)
+                    hi = (n_iota == (iyc + 1)[..., None]).astype(jnp.float32)
+                    A = lo * (1.0 - dy)[..., None] + hi * dy[..., None]
+                    A = A * ok[..., None].astype(jnp.float32)
+                    # batched GEMV on the MXU: (8, kc, nh) x (8, nh) -> (8, kc)
+                    return jax.lax.dot_general(
+                        A, sm,
+                        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                        preferred_element_type=jnp.float32)
+
+                jlo = jg * 8
+                for kc0 in range(0, khp, k_chunk):
+                    kc = min(k_chunk, khp - kc0)
+                    k = kc0 + jax.lax.broadcasted_iota(
+                        jnp.float32, (8, kc), 1)
+                    y = a + b * k
+                    lo_v = interp_onehot(y) * w_vec
+                    out_ref[ii, jlo:jlo + 8, kc0:kc0 + kc] += lo_v
+                    # Mirrored half only covers k < kh (skips the odd-nz
+                    # self-mirrored middle plane).
+                    kch = max(0, min(kc0 + kc, kh) - kc0)
+                    if kch > 0:
+                        hi_v = interp_onehot(
+                            (nh - 1.0) - y[:, :kch]) * w_vec
+                        out_ref[ii, jlo:jlo + 8,
+                                nz - kc0 - kch:nz - kc0] += hi_v[:, ::-1]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vol_shape_xyz", "block", "k_chunk", "interpret"),
+)
+def backproject_onehot_pallas(img_t: jnp.ndarray, mat: jnp.ndarray,
+                              vol_shape_xyz, *, block=(4, 8),
+                              k_chunk: int = 128,
+                              interpret: bool = True) -> jnp.ndarray:
+    n_proj, nw, nh = img_t.shape
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    assert ni % BI == 0 and nj % BJ == 0 and BJ % 8 == 0
+    k_chunk = min(k_chunk, nz - nz // 2)
+
+    kernel = _make_kernel(BI, BJ, nz, nw, nh, k_chunk)
+    grid = (ni // BI, nj // BJ, n_proj)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 3, 4), lambda ti, tj, s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, nw, nh), lambda ti, tj, s: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ, nz), lambda ti, tj, s: (ti, tj, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, nh), jnp.float32)],
+        interpret=interpret,
+    )(mat.astype(jnp.float32), img_t.astype(jnp.float32))

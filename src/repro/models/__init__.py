@@ -1,0 +1,12 @@
+"""LM model substrate for the assigned architecture pool.
+
+Functional JAX (no framework): parameters are pytrees of arrays, layer
+stacks are lax.scan-compatible (stacked leading dim), every architecture
+family exposes init / forward / prefill / decode through models.model.
+"""
+
+from .model import (  # noqa: F401
+    abstract_params,
+    build_model,
+    init_params,
+)

@@ -1,0 +1,445 @@
+"""Attention: GQA (full + sliding window) and MLA, prefill + decode paths.
+
+Prefill uses a flash-style chunked attention (lax.scan over KV chunks with
+an online softmax) so the S^2 score matrix is never materialized — at the
+32k prefill shapes of the assigned pool a materialized score tensor would
+dominate HBM. Decode is a single fused read over the cache (full) or over
+a ring buffer (sliding window). MLA decode uses DeepSeek's weight
+absorption: attention runs entirely in the kv_lora latent space and the
+cache stores only (c_kv, k_rope).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import KeyGen, apply_rope, dense_init, rope_freqs
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# reference (S^2) attention — oracle for tests
+# --------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """q: (B,Sq,H,D); k,v: (B,Skv,KVH,D). Returns (B,Sq,H,Dv)."""
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qf = q.astype(jnp.float32).reshape(B, Sq, KVH, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / math.sqrt(D)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return out.reshape(B, Sq, H, -1).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# flash-style chunked attention (prefill) with a CUSTOM VJP
+# --------------------------------------------------------------------------
+# The naive differentiated scan would checkpoint the (o, m, l) carry at
+# every KV chunk (O(n_chunks * B*Sq*H*D) temp — measured 100s of GB/device
+# at the 32k cells). The custom VJP implements the FlashAttention-2
+# backward: save only (q, k, v, out, LSE) and recompute P chunk-by-chunk.
+
+def _chunk_kv(k, v, chunk):
+    B, Skv, KVH, D = k.shape
+    Dv = v.shape[3]
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KVH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KVH, Dv).transpose(1, 0, 2, 3, 4)
+    return kc, vc, n_chunks
+
+
+def _chunk_mask(kpos, qpos, Skv, causal, window):
+    mask = (kpos < Skv)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset):
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    G = H // KVH
+    chunk = min(chunk, Skv)
+    kc, vc, n_chunks = _chunk_kv(k, v, chunk)
+    scale = 1.0 / math.sqrt(D)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KVH, G, D)
+    qpos = (q_offset + jnp.arange(Sq))[:, None]          # (Sq, 1)
+
+    def body(carry, xs):
+        o, m, l = carry
+        kb, vb, c_idx = xs
+        kpos = c_idx * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb.astype(jnp.float32))
+        mask = _chunk_mask(kpos, qpos, Skv, causal, window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, Sq, KVH, G, Dv), jnp.float32)
+    m0 = jnp.full((B, Sq, KVH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G), jnp.float32)
+    (o, m, l), _ = jax.lax.scan(
+        body, (o0, m0, l0), (kc, vc, jnp.arange(n_chunks)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = o / l_safe[..., None]
+    lse = m + jnp.log(l_safe)                            # (B,Sq,KVH,G)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype), lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, chunk, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    G = H // KVH
+    chunk = min(chunk, Skv)
+    kc, vc, n_chunks = _chunk_kv(k, v, chunk)
+    scale = 1.0 / math.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KVH, G, D)
+    dof = dout.astype(jnp.float32).reshape(B, Sq, KVH, G, Dv)
+    of = out.astype(jnp.float32).reshape(B, Sq, KVH, G, Dv)
+    delta = jnp.sum(dof * of, axis=-1)                   # (B,Sq,KVH,G)
+    qpos = (q_offset + jnp.arange(Sq))[:, None]
+
+    def body(dq_acc, xs):
+        kb, vb, c_idx = xs
+        kbf = kb.astype(jnp.float32)
+        vbf = vb.astype(jnp.float32)
+        kpos = c_idx * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kbf) * scale
+        mask = _chunk_mask(kpos, qpos, Skv, causal, window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                  # normalized probs
+        dv_b = jnp.einsum("bqhgk,bqhgd->bkhd", p, dof)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dof, vbf)
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + jnp.einsum("bqhgk,bkhd->bqhgd", ds, kbf) * scale
+        dk_b = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qf) * scale
+        return dq_acc, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, Sq, KVH, G, D), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        body, dq0, (kc, vc, jnp.arange(n_chunks)))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, KVH,
+                                               D)[:, :Skv]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, KVH,
+                                               Dv)[:, :Skv]
+    return (dq.reshape(B, Sq, H, D).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, chunk=1024,
+                    q_offset=0):
+    """Online-softmax attention, scanning KV in chunks, O(chunk) memory in
+    both forward and backward (custom VJP; FlashAttention-2 schedule).
+
+    q: (B,Sq,H,D); k,v: (B,Skv,KVH,Dk/Dv). Returns (B,Sq,H,Dv) in q.dtype.
+    """
+    return _flash(q, k, v, causal, window, chunk, q_offset)
+
+
+# --------------------------------------------------------------------------
+# decode attention over caches
+# --------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """One-token attention over a full cache.
+
+    q: (B,1,H,D); k_cache/v_cache: (B,S,KVH,D); pos: () int32 current index
+    (the cache holds valid entries at [0, pos]).
+
+    NOTE: the cache is contracted in ITS OWN dtype with fp32 accumulation
+    (preferred_element_type) — an explicit .astype(f32) here gets hoisted
+    out of the decode layer-scan by XLA, materializing a full fp32 copy
+    of the stacked multi-GB cache (measured +10.7 GB/dev, §Perf).
+    """
+    B, _, H, D = q.shape
+    S, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qf = ((q.astype(jnp.float32) / math.sqrt(D))
+          .astype(k_cache.dtype).reshape(B, KVH, G, D))
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+def decode_attention_window(q, k_ring, v_ring, pos, window):
+    """One-token attention over a ring-buffer cache (sliding window).
+
+    k_ring/v_ring: (B,W,KVH,D); slot w holds absolute position
+    p_w = pos - ((pos - w) mod W); valid iff p_w >= 0 (rope already applied
+    at write time at the absolute position).
+    """
+    B, W, KVH, D = k_ring.shape
+    H = q.shape[2]
+    G = H // KVH
+    qf = ((q.astype(jnp.float32) / math.sqrt(D))
+          .astype(k_ring.dtype).reshape(B, KVH, G, D))
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_ring,
+                   preferred_element_type=jnp.float32)
+    w_idx = jnp.arange(W)
+    slot_pos = pos - jnp.mod(pos - w_idx, W)
+    valid = (slot_pos >= 0) & (slot_pos > pos - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_ring.dtype), v_ring,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# --------------------------------------------------------------------------
+
+def init_gqa(kg: KeyGen, cfg) -> dict:
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    p = {
+        "wq": dense_init(kg(), d, H * hd, cfg.np_dtype),
+        "wk": dense_init(kg(), d, KVH * hd, cfg.np_dtype),
+        "wv": dense_init(kg(), d, KVH * hd, cfg.np_dtype),
+        "wo": dense_init(kg(), H * hd, d, cfg.np_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.np_dtype)
+        p["bk"] = jnp.zeros((KVH * hd,), cfg.np_dtype)
+        p["bv"] = jnp.zeros((KVH * hd,), cfg.np_dtype)
+    return p
+
+
+def gqa_qkv(p: dict, x: jnp.ndarray, cfg, positions, inv_freq):
+    """Project + rope. x: (B,S,d). Returns q (B,S,H,hd), k/v (B,S,KVH,hd)."""
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    from . import pshint
+    q = pshint.constrain(q.reshape(B, S, H, hd), "heads")
+    k = pshint.constrain(k.reshape(B, S, KVH, hd), "heads")
+    v = pshint.constrain(v.reshape(B, S, KVH, hd), "heads")
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def gqa_prefill(p: dict, x, cfg, positions, inv_freq, *, window=None):
+    q, k, v = gqa_qkv(p, x, cfg, positions, inv_freq)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        chunk=cfg.attn_chunk)
+    B, S = x.shape[:2]
+    out = o.reshape(B, S, -1) @ p["wo"]
+    return out, (k, v)
+
+
+def gqa_decode(p: dict, x, cfg, pos, k_cache, v_cache, inv_freq,
+               *, window=None):
+    """x: (B,1,d). Updates the cache at ``pos`` and attends.
+
+    Full cache: (B,S,KVH,hd) updated at index pos.
+    Window cache: ring (B,W,KVH,hd) updated at slot pos % W.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = gqa_qkv(p, x, cfg, positions, inv_freq)
+    if window is None:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        o = decode_attention(q, k_cache, v_cache, pos)
+    else:
+        W = k_cache.shape[1]
+        slot = jnp.mod(pos, W)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+        o = decode_attention_window(q, k_cache, v_cache, pos, window)
+    out = o.reshape(B, 1, -1) @ p["wo"]
+    return out, (k_cache, v_cache)
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# --------------------------------------------------------------------------
+
+def cross_attention(p: dict, x, enc_k, enc_v, cfg, enc_mask=None):
+    """x: (B,Sd,d); enc_k/enc_v: (B,Se,KVH,hd) precomputed from encoder."""
+    B, Sd, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(B, Sd, H, hd)
+    o = flash_attention(q, enc_k, enc_v, causal=False,
+                        chunk=cfg.attn_chunk)
+    return o.reshape(B, Sd, -1) @ p["wo"]
+
+
+def init_cross(kg: KeyGen, cfg) -> dict:
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "wq": dense_init(kg(), d, H * hd, cfg.np_dtype),
+        "wk": dense_init(kg(), d, KVH * hd, cfg.np_dtype),
+        "wv": dense_init(kg(), d, KVH * hd, cfg.np_dtype),
+        "wo": dense_init(kg(), H * hd, d, cfg.np_dtype),
+    }
+
+
+def cross_kv(p: dict, enc_out, cfg):
+    B, Se, _ = enc_out.shape
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim_
+    k = (enc_out @ p["wk"]).reshape(B, Se, KVH, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, KVH, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# --------------------------------------------------------------------------
+
+def init_mla(kg: KeyGen, cfg) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, L = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    return {
+        "wq": dense_init(kg(), d, H * (dn + dr), cfg.np_dtype),
+        "w_dkv": dense_init(kg(), d, L, cfg.np_dtype),
+        "kv_norm": {"scale": jnp.ones((L,), cfg.np_dtype)},
+        "w_uk": dense_init(kg(), L, H * dn, cfg.np_dtype),
+        "w_uv": dense_init(kg(), L, H * dv, cfg.np_dtype),
+        "w_kr": dense_init(kg(), d, dr, cfg.np_dtype),
+        "wo": dense_init(kg(), H * dv, d, cfg.np_dtype),
+    }
+
+
+def _mla_q(p, x, cfg, positions, inv_freq_r):
+    from .layers import rms_norm
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = m.qk_nope_dim, m.qk_rope_dim
+    q = (x @ p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, inv_freq_r)
+    return q_nope, q_rope
+
+
+def mla_prefill(p: dict, x, cfg, positions, inv_freq_r):
+    """Returns (out, cache=(c_kv, k_rope)) — the latent cache."""
+    from .layers import rms_norm
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, L = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, x, cfg, positions, inv_freq_r)
+    c = rms_norm(p["kv_norm"], x @ p["w_dkv"])              # (B,S,L)
+    k_nope = (c @ p["w_uk"]).reshape(B, S, H, dn)
+    vv = (c @ p["w_uv"]).reshape(B, S, H, dv)
+    k_r = apply_rope((x @ p["w_kr"]).reshape(B, S, 1, dr), positions,
+                     inv_freq_r)
+    k_r_b = jnp.broadcast_to(k_r, (B, S, H, dr))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_r_b], axis=-1)
+    o = flash_attention(q, k, vv, causal=True, chunk=cfg.attn_chunk)
+    out = o.reshape(B, S, -1) @ p["wo"]
+    return out, (c, k_r[:, :, 0, :])
+
+
+def mla_decode(p: dict, x, cfg, pos, c_cache, kr_cache, inv_freq_r):
+    """Weight-absorbed MLA decode: attention in latent space.
+
+    c_cache: (B,S,L); kr_cache: (B,S,dr). Score_t = q_abs . c_t + q_r . kr_t
+    where q_abs = q_nope absorbed through w_uk; output re-expanded through
+    w_uv. FLOPs per token scale with L + dr, not H*(dn+dv).
+    """
+    from .layers import rms_norm
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, L = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim, m.kv_lora_rank
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions, inv_freq_r)  # (B,1,H,*)
+    # Update latent cache at pos.
+    c_new = rms_norm(p["kv_norm"], x @ p["w_dkv"])             # (B,1,L)
+    kr_new = apply_rope((x @ p["w_kr"]).reshape(B, 1, 1, dr), positions,
+                        inv_freq_r)[:, :, 0, :]
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, c_new.astype(c_cache.dtype), (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(
+        kr_cache, kr_new.astype(kr_cache.dtype), (0, pos, 0))
+    # Absorb: q_abs[b,h,l] = sum_dn q_nope * w_uk[l, h*dn+dn_idx].
+    # Cache einsums stay in cache dtype with fp32 accumulation — an
+    # .astype(f32) on the cache would get hoisted out of the decode
+    # layer-scan into a full fp32 copy of the stacked latent cache.
+    w_uk = p["w_uk"].reshape(L, H, dn)
+    qn = q_nope[:, 0]                                          # (B,H,dn)
+    q_abs = jnp.einsum("bhd,lhd->bhl", qn, w_uk,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(dn + dr)
+    s_lat = jnp.einsum("bhl,bsl->bhs", q_abs.astype(c_cache.dtype),
+                       c_cache, preferred_element_type=jnp.float32)
+    qr = q_rope[:, 0]                                          # (B,H,dr)
+    s_rope = jnp.einsum("bhd,bsd->bhs", qr.astype(kr_cache.dtype),
+                        kr_cache, preferred_element_type=jnp.float32)
+    s = (s_lat + s_rope) * scale
+    S = c_cache.shape[1]
+    valid = jnp.arange(S)[None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    att = jax.nn.softmax(s, axis=-1)
+    z = jnp.einsum("bhs,bsl->bhl", att.astype(c_cache.dtype), c_cache,
+                   preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"].reshape(L, H, dv).astype(jnp.float32)
+    o = jnp.einsum("bhl,lhd->bhd", z, w_uv)                    # (B,H,dv)
+    out = o.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, (c_cache, kr_cache)

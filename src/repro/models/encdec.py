@@ -1,0 +1,172 @@
+"""Encoder-decoder transformer (SeamlessM4T-medium backbone).
+
+Per the assigned pool, the audio frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) from input_specs. The
+text decoder is a standard causal stack with cross-attention; decode
+serves with a self-attention KV cache plus precomputed cross K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import pshint
+from .layers import (
+    KeyGen, apply_norm, cross_entropy, embed, embed_init, init_mlp,
+    init_norm, mlp, rope_freqs, unembed,
+ remat_policy,
+)
+from .transformer import stack_layers
+
+
+def _init_enc_layer(kg: KeyGen, cfg) -> dict:
+    return {
+        "ln_attn": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "ln_mlp": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "attn": attn.init_gqa(kg, cfg),
+        "mlp": init_mlp(kg, cfg.d_model, cfg.d_ff, cfg.np_dtype,
+                        cfg.activation),
+    }
+
+
+def _init_dec_layer(kg: KeyGen, cfg) -> dict:
+    p = _init_enc_layer(kg, cfg)
+    p["ln_cross"] = init_norm(cfg.norm, cfg.d_model, cfg.np_dtype)
+    p["cross"] = attn.init_cross(kg, cfg)
+    return p
+
+
+def init_encdec(kg: KeyGen, cfg) -> dict:
+    return {
+        "embed": embed_init(kg(), cfg.vocab_size, cfg.d_model, cfg.np_dtype),
+        "enc_layers": stack_layers(
+            [_init_enc_layer(kg, cfg) for _ in range(cfg.n_enc_layers)]),
+        "dec_layers": stack_layers(
+            [_init_dec_layer(kg, cfg) for _ in range(cfg.n_layers)]),
+        "ln_enc": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "ln_dec": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "unembed": (jax.random.normal(kg(), (cfg.d_model, cfg.vocab_size))
+                    * 0.02).astype(cfg.np_dtype),
+    }
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg, *,
+           for_train: bool = False):
+    """frames: (B, S_enc, d_model) stub embeddings -> encoder output."""
+    B, S, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+
+    def body(h, lp):
+        hn = apply_norm(cfg.norm, lp["ln_attn"], h)
+        q, k, v = attn.gqa_qkv(lp["attn"], hn, cfg, positions, inv_freq)
+        o = attn.flash_attention(q, k, v, causal=False,
+                                 chunk=cfg.attn_chunk)
+        h = h + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        hn = apply_norm(cfg.norm, lp["ln_mlp"], h)
+        h = h + mlp(lp["mlp"], hn, cfg.activation)
+        return h, None
+
+    fn = body
+    if cfg.remat and for_train:
+        fn = jax.checkpoint(body,
+                            policy=remat_policy(cfg))
+    h, _ = jax.lax.scan(fn, frames.astype(cfg.np_dtype),
+                        params["enc_layers"])
+    return apply_norm(cfg.norm, params["ln_enc"], h)
+
+
+def decode_seq(params: dict, tokens: jnp.ndarray, enc_out: jnp.ndarray,
+               cfg, *, for_train: bool = False, collect_cache: bool = False,
+               return_hidden: bool = False):
+    """Teacher-forced decoder pass. tokens (B, S_dec)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+
+    def body(h, lp):
+        hn = apply_norm(cfg.norm, lp["ln_attn"], h)
+        out, cache = attn.gqa_prefill(lp["attn"], hn, cfg, positions,
+                                      inv_freq)
+        h = h + out
+        hn = apply_norm(cfg.norm, lp["ln_cross"], h)
+        ck, cv = attn.cross_kv(lp["cross"], enc_out, cfg)
+        h = h + attn.cross_attention(lp["cross"], hn, ck, cv, cfg)
+        hn = apply_norm(cfg.norm, lp["ln_mlp"], h)
+        h = h + mlp(lp["mlp"], hn, cfg.activation)
+        h = pshint.constrain(h, "residual")
+        ys = (cache, (ck, cv)) if collect_cache else None
+        return h, ys
+
+    fn = body
+    if cfg.remat and for_train:
+        fn = jax.checkpoint(body,
+                            policy=remat_policy(cfg))
+    h, ys = jax.lax.scan(fn, x, params["dec_layers"])
+    h = apply_norm(cfg.norm, params["ln_dec"], h)
+    if return_hidden:
+        return h, ys
+    logits = unembed(params["unembed"], h, tied=False)
+    return logits, ys
+
+
+def encdec_loss(params: dict, batch: dict, cfg) -> jnp.ndarray:
+    from .layers import chunked_cross_entropy
+    enc_out = encode(params, batch["frames"], cfg, for_train=True)
+    h, _ = decode_seq(params, batch["tokens"], enc_out, cfg,
+                      for_train=True, return_hidden=True)
+    return chunked_cross_entropy(h, params["unembed"], batch["labels"],
+                                 tied=False)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def encdec_prefill(params: dict, frames: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg, max_len: int):
+    """Encode + teacher-forced decoder prefill; returns decode state."""
+    enc_out = encode(params, frames, cfg)
+    logits, ys = decode_seq(params, tokens, enc_out, cfg,
+                            collect_cache=True)
+    (k, v), (ck, cv) = ys
+    S = tokens.shape[1]
+    pad = max_len - S
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "ck": ck, "cv": cv}
+    return logits[:, -1:], cache, jnp.int32(S)
+
+
+def encdec_decode_step(params: dict, cache: dict, token: jnp.ndarray,
+                       pos, cfg):
+    B = token.shape[0]
+    x = embed(params["embed"], token)
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        hn = apply_norm(cfg.norm, lp["ln_attn"], h)
+        out, (k2, v2) = attn.gqa_decode(lp["attn"], hn, cfg, pos, kc, vc,
+                                        inv_freq)
+        h = h + out
+        hn = apply_norm(cfg.norm, lp["ln_cross"], h)
+        o = attn.flash_attention(
+            (hn @ lp["cross"]["wq"]).reshape(B, 1, cfg.n_heads,
+                                             cfg.head_dim_),
+            ck, cv, causal=False, chunk=cfg.attn_chunk)
+        h = h + o.reshape(B, 1, -1) @ lp["cross"]["wo"]
+        hn = apply_norm(cfg.norm, lp["ln_mlp"], h)
+        h = h + mlp(lp["mlp"], hn, cfg.activation)
+        return h, (k2, v2)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    new_cache = dict(cache, k=k_new, v=v_new)
+    x = apply_norm(cfg.norm, params["ln_dec"], x)
+    logits = unembed(params["unembed"], x, tied=False)
+    return logits, new_cache

@@ -1,0 +1,249 @@
+"""Hybrid recurrent/attention assembly (RecurrentGemma-style, 1:2 pattern).
+
+Layer pattern: repeating macro-units of (rec, rec, local-attn), each layer
+being temporal-mix + MLP with pre-norm residuals. The stack is scanned
+over macro-units (keeps HLO O(1) in depth despite the heterogeneous
+pattern); trailing layers that do not fill a macro-unit form a second,
+smaller scan over (rec,) units.
+
+Decode state per layer: RG-LRU hidden + conv tail for "rec", a
+window-sized ring-buffer KV cache for "attn" — total state is O(window),
+which is what makes the long_500k cell runnable (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import pshint
+from . import rglru
+from .layers import (
+    KeyGen, apply_norm, embed, init_mlp, init_norm, mlp, rope_freqs, unembed,
+ remat_policy,
+)
+
+
+def _pattern(cfg):
+    """Per-layer kinds for the full stack."""
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def n_units(cfg):
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    full = cfg.n_layers // len(pat)
+    trail = cfg.n_layers - full * len(pat)
+    return full, trail, pat
+
+
+def _init_layer(kg: KeyGen, cfg, kind: str) -> dict:
+    p = {
+        "ln_t": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "ln_m": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "mlp": init_mlp(kg, cfg.d_model, cfg.d_ff, cfg.np_dtype,
+                        cfg.activation),
+    }
+    if kind == "rec":
+        p["rec"] = rglru.init_rglru(kg, cfg)
+    else:
+        p["attn"] = attn.init_gqa(kg, cfg)
+    return p
+
+
+def init_hybrid(kg: KeyGen, cfg) -> dict:
+    from .transformer import stack_layers
+    full, trail, pat = n_units(cfg)
+    units = []
+    for _ in range(full):
+        units.append({k: _init_layer(kg, cfg, kind)
+                      for k, kind in zip(_unit_keys(pat), pat)})
+    params = {
+        "embed": (jax.random.normal(kg(), (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(cfg.np_dtype),
+        "ln_f": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "units": stack_layers(units),
+    }
+    if trail:
+        tr = [{
+            "layer": _init_layer(kg, cfg, pat[i % len(pat)])}
+            for i in range(trail)]
+        # trailing layers are all the same kind by construction (pattern
+        # prefix); assert to be safe
+        kinds = {pat[i % len(pat)] for i in range(trail)}
+        assert len(kinds) == 1, "trailing layers must share a kind"
+        params["trail"] = stack_layers(tr)
+    return params
+
+
+def _unit_keys(pat):
+    keys = []
+    counts = {}
+    for kind in pat:
+        counts[kind] = counts.get(kind, 0) + 1
+        keys.append(f"{kind}{counts[kind]}")
+    return keys
+
+
+# --------------------------------------------------------------------------
+# sequence mode (train / prefill)
+# --------------------------------------------------------------------------
+
+def _layer_seq(p, x, cfg, kind, positions, inv_freq, state=None,
+               collect_state=False):
+    h = apply_norm(cfg.norm, p["ln_t"], x)
+    new_state = None
+    if kind == "rec":
+        out, new_state = rglru.recurrent_block_seq(
+            p["rec"], h, cfg, state)
+    else:
+        out, (k, v) = attn.gqa_prefill(p["attn"], h, cfg, positions,
+                                       inv_freq, window=cfg.window)
+        if collect_state:
+            # keep only the last `window` keys, layout as ring buffer
+            W = cfg.window
+            S = k.shape[1]
+            if S >= W:
+                kw, vw = k[:, S - W:], v[:, S - W:]
+                # index idx holds abs pos (S-W+idx); its ring slot is
+                # (S-W+idx) % W  ->  roll right by (S-W) % W.
+                roll = (S - W) % W
+                kw = jnp.roll(kw, roll, axis=1)
+                vw = jnp.roll(vw, roll, axis=1)
+            else:
+                pad = W - S
+                kw = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vw = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_state = {"k": kw, "v": vw}
+    x = x + out
+    h = apply_norm(cfg.norm, p["ln_m"], x)
+    x = x + mlp(p["mlp"], h, cfg.activation)
+    return x, new_state
+
+
+def hybrid_forward(params: dict, tokens: jnp.ndarray, cfg,
+                   *, for_train: bool = False, collect_state: bool = False,
+                   return_hidden: bool = False):
+    B, S = tokens.shape
+    full, trail, pat = n_units(cfg)
+    x = embed(params["embed"], tokens) * jnp.sqrt(
+        jnp.float32(cfg.d_model)).astype(cfg.np_dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+    keys = _unit_keys(pat)
+
+    def unit_body(h, up):
+        states = {}
+        for key, kind in zip(keys, pat):
+            h, st = _layer_seq(up[key], h, cfg, kind, positions, inv_freq,
+                               collect_state=collect_state)
+            states[key] = st
+        h = pshint.constrain(h, "residual")
+        return h, (states if collect_state else None)
+
+    fn = unit_body
+    if cfg.remat and for_train:
+        fn = jax.checkpoint(unit_body,
+                            policy=remat_policy(cfg))
+    x, unit_states = jax.lax.scan(fn, x, params["units"])
+
+    trail_states = None
+    if trail:
+        def trail_body(h, tp):
+            h, st = _layer_seq(tp["layer"], h, cfg, pat[0], positions,
+                               inv_freq, collect_state=collect_state)
+            return h, (st if collect_state else None)
+        x, trail_states = jax.lax.scan(trail_body, x, params["trail"])
+
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    if return_hidden:
+        return x, (unit_states, trail_states)
+    logits = unembed(params["embed"], x, tied=True)
+    logits = 30.0 * jnp.tanh(logits / 30.0)    # gemma-style soft cap
+    if collect_state:
+        return logits, (unit_states, trail_states)
+    return logits, jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_hybrid_state(cfg, batch):
+    """Decode state pytree matching the scan structure of the params."""
+    full, trail, pat = n_units(cfg)
+    keys = _unit_keys(pat)
+
+    def one_layer_state(kind, n):
+        if kind == "rec":
+            return {
+                "h": jnp.zeros((n, batch, cfg.lru_width), jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1,
+                                   cfg.lru_width), cfg.np_dtype),
+            }
+        return {
+            "k": jnp.zeros((n, batch, cfg.window, cfg.n_kv_heads,
+                            cfg.head_dim_), cfg.np_dtype),
+            "v": jnp.zeros((n, batch, cfg.window, cfg.n_kv_heads,
+                            cfg.head_dim_), cfg.np_dtype),
+        }
+
+    unit_state = {k: one_layer_state(kind, full)
+                  for k, kind in zip(keys, pat)}
+    state = {"units": unit_state}
+    if trail:
+        state["trail"] = one_layer_state(pat[0], trail)
+    return state
+
+
+def _layer_step(p, x, cfg, kind, pos, st, inv_freq):
+    h = apply_norm(cfg.norm, p["ln_t"], x)
+    if kind == "rec":
+        out, new_st = rglru.recurrent_block_step(p["rec"], h, cfg, st)
+    else:
+        out, (k2, v2) = attn.gqa_decode(p["attn"], h, cfg, pos,
+                                        st["k"], st["v"], inv_freq,
+                                        window=cfg.window)
+        new_st = {"k": k2, "v": v2}
+    x = x + out
+    h = apply_norm(cfg.norm, p["ln_m"], x)
+    x = x + mlp(p["mlp"], h, cfg.activation)
+    return x, new_st
+
+
+def hybrid_decode_step(params: dict, state: dict, token: jnp.ndarray,
+                       pos, cfg):
+    """token (B,1); state from init_hybrid_state. Returns (logits, state)."""
+    full, trail, pat = n_units(cfg)
+    keys = _unit_keys(pat)
+    x = embed(params["embed"], token) * jnp.sqrt(
+        jnp.float32(cfg.d_model)).astype(cfg.np_dtype)
+    inv_freq = rope_freqs(cfg.head_dim_, cfg.rope_theta)
+
+    def unit_body(h, xs):
+        up, ust = xs
+        new_states = {}
+        for key, kind in zip(keys, pat):
+            h, nst = _layer_step(up[key], h, cfg, kind, pos, ust[key],
+                                 inv_freq)
+            new_states[key] = nst
+        return h, new_states
+
+    x, new_unit_states = jax.lax.scan(
+        unit_body, x, (params["units"], state["units"]))
+    new_state = {"units": new_unit_states}
+
+    if trail:
+        def trail_body(h, xs):
+            tp, tst = xs
+            h, nst = _layer_step(tp["layer"], h, cfg, pat[0], pos, tst,
+                                 inv_freq)
+            return h, nst
+        x, new_trail = jax.lax.scan(trail_body, x,
+                                    (params["trail"], state["trail"]))
+        new_state["trail"] = new_trail
+
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    logits = unembed(params["embed"], x, tied=True)
+    return 30.0 * jnp.tanh(logits / 30.0), new_state

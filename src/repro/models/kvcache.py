@@ -1,0 +1,51 @@
+"""KV-cache structures for every attention/recurrence family.
+
+Caches are plain pytrees with a stacked leading layer axis so the decode
+layer-scan threads them as scan xs/ys. Layouts put the gathered axis
+minor (O1: unit-stride minor axis — see DESIGN.md §5).
+
+Families:
+  full      (L, B, S, KVH, hd) k + v          — dense/GQA/MoE archs
+  mla       (L, B, S, kv_lora) c + (L,B,S,dr) — DeepSeek-V2 latent cache
+  window    (L, B, W, KVH, hd) ring buffers   — sliding-window layers
+  recurrent (L, B, lru_width) h + conv tail   — RG-LRU layers
+  rwkv      (L, B, H, hd, hd) S + shift state — RWKV-6
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def full_cache(n_layers, batch, max_len, n_kv, head_dim, dtype):
+    shape = (n_layers, batch, max_len, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def mla_cache(n_layers, batch, max_len, kv_lora, rope_dim, dtype):
+    return {
+        "c": jnp.zeros((n_layers, batch, max_len, kv_lora), dtype),
+        "kr": jnp.zeros((n_layers, batch, max_len, rope_dim), dtype),
+    }
+
+
+def window_cache(n_layers, batch, window, n_kv, head_dim, dtype):
+    shape = (n_layers, batch, window, n_kv, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def recurrent_state(n_layers, batch, lru_width, conv_width, dtype):
+    return {
+        "h": jnp.zeros((n_layers, batch, lru_width), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, conv_width - 1, lru_width),
+                          dtype),
+    }
+
+
+def rwkv_state(n_layers, batch, n_heads, head_size, d_model, dtype):
+    return {
+        "S": jnp.zeros((n_layers, batch, n_heads, head_size, head_size),
+                       jnp.float32),
+        "x_tm": jnp.zeros((n_layers, batch, d_model), dtype),
+        "x_cm": jnp.zeros((n_layers, batch, d_model), dtype),
+    }

@@ -1,0 +1,232 @@
+"""Shared neural-net building blocks (functional, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; stacked layers add a leading
+    n_layers axis to every leaf (lax.scan consumes them directly);
+  * activations flow in ``cfg.dtype`` (bf16 on TPU); normalization
+    statistics, softmax and RoPE run in fp32;
+  * weight layout is (d_in, d_out) so ``x @ w`` contracts the minor axis
+    of x — the O1 lesson (unit-stride minor) applied to the LM stack.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# rng plumbing
+# --------------------------------------------------------------------------
+
+class KeyGen:
+    """Hands out fresh PRNG keys: kg = KeyGen(seed); w = init(kg(), ...)."""
+
+    def __init__(self, key_or_seed):
+        if isinstance(key_or_seed, int):
+            key_or_seed = jax.random.PRNGKey(key_or_seed)
+        self._key = key_or_seed
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind: str, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return rms_norm(params, x) if kind == "rmsnorm" else layer_norm(params, x)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(
+        d, dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,), fp32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x[..., :half], x[..., half:]) — NEOX style.
+
+    x: (..., S, n_heads, head_dim); positions: (..., S) int32.
+    The angle table is hoisted by callers where possible (O2: k-invariant
+    hoisting — here, layer-invariant: computed once per step, reused by
+    every layer of the scan).
+    """
+    half = inv_freq.shape[0]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]   # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(kg: KeyGen, d_model: int, d_ff: int, dtype,
+             activation: str = "swiglu") -> dict:
+    if activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_init(kg(), d_model, d_ff, dtype),
+            "wi_up": dense_init(kg(), d_model, d_ff, dtype),
+            "wo": dense_init(kg(), d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(kg(), d_model, d_ff, dtype),
+        "wo": dense_init(kg(), d_ff, d_model, dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray, activation: str = "swiglu"):
+    from . import pshint
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        g = act(pshint.constrain(x @ params["wi_gate"], "ffn"))
+        u = pshint.constrain(x @ params["wi_up"], "ffn")
+        return (g * u) @ params["wo"]
+    h = jax.nn.gelu(pshint.constrain(x @ params["wi"], "ffn"))
+    return h @ params["wo"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray,
+            *, tied: bool) -> jnp.ndarray:
+    """Logits in fp32 (loss stability)."""
+    w = table_or_head.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if tied:
+        return jnp.einsum("...d,vd->...v", xf, w)
+    return xf @ w
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, table_or_head: jnp.ndarray,
+                          labels: jnp.ndarray, *, tied: bool,
+                          chunk: int = 512,
+                          softcap: float = 0.0) -> jnp.ndarray:
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    Scans the sequence in chunks; each chunk's logits are produced,
+    consumed and (via jax.checkpoint) recomputed in backward — peak temp
+    drops from O(B*S*V) to O(B*chunk*V). The paper's O5 batching argument
+    applied to the loss layer: accumulate in registers, write once.
+    """
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-1)
+    h_c = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)
+    l_c = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, cnt = carry
+        hb, lb = xs
+        logits = unembed(table_or_head, hb, tied=tied)   # (B, chunk, V)
+        if softcap:
+            logits = softcap * jnp.tanh(logits / softcap)
+        valid = lb >= 0
+        safe = jnp.maximum(lb, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, logz - ll, 0.0)
+        return (nll_sum + nll.sum(),
+                cnt + valid.sum(dtype=jnp.float32)), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (h_c, l_c))
+    return nll_sum / jnp.maximum(cnt, 1.0)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32. labels: int32, -1 = ignore."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def remat_policy(cfg):
+    """jax.checkpoint policy from cfg.remat_policy.
+
+    "nothing": minimum memory, maximum recompute (and, under FSDP+SP,
+    maximum re-gather traffic in backward).
+    "dots": save matmul outputs — removes the recompute pass's weight and
+    activation all-gathers at the cost of per-layer dot-output residency
+    (measured trade in EXPERIMENTS.md §Perf).
+    """
+    import jax as _jax
+    if getattr(cfg, "remat_policy", "nothing") == "dots":
+        return _jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return _jax.checkpoint_policies.nothing_saveable

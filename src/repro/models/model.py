@@ -1,0 +1,423 @@
+"""Model dispatcher: one uniform API over every architecture family.
+
+    model = build_model(cfg)
+    params = model.init(seed)                 # or abstract_params(cfg)
+    loss = model.loss(params, batch)          # train objective
+    logits, cache, pos = model.prefill(params, batch, max_len)
+    logits, cache = model.decode_step(params, cache, token, pos)
+    batch = model.dummy_batch(shape)          # concrete (smoke tests)
+    specs = model.input_specs(shape)          # ShapeDtypeStructs (dry-run)
+
+Families: dense | moe (incl. MLA) | encdec | hybrid | ssm | vlm.
+Frontend stubs ([audio]/[vlm] per the pool): input_specs provide
+precomputed frame/patch embeddings; the backbone is fully real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, ssm, transformer
+from .layers import KeyGen, cross_entropy, dense_init
+
+
+# --------------------------------------------------------------------------
+# analytic parameter counts (roofline's 6*N*D)
+# --------------------------------------------------------------------------
+
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    d, ff, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+
+    def attn_params():
+        if cfg.mla is not None:
+            m = cfg.mla
+            return (d * H * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * m.kv_lora_rank + m.kv_lora_rank
+                    + m.kv_lora_rank * H * m.qk_nope_dim
+                    + m.kv_lora_rank * H * m.v_head_dim
+                    + d * m.qk_rope_dim + H * m.v_head_dim * d)
+        n = d * H * hd + 2 * d * KVH * hd + H * hd * d
+        if cfg.qkv_bias:
+            n += H * hd + 2 * KVH * hd
+        return n
+
+    def mlp_params(dff):
+        mult = 3 if cfg.activation == "swiglu" else 2
+        return mult * d * dff
+
+    if cfg.family == "ssm":
+        hd_r = cfg.rwkv_head_size
+        Hn = d // hd_r
+        tm = (6 * d + d * 5 * cfg.rwkv_ddlora + 5 * cfg.rwkv_ddlora * d
+              + d + d * cfg.rwkv_decay_lora + cfg.rwkv_decay_lora * d
+              + Hn * hd_r + 5 * d * d + 2 * d)
+        cm = 2 * d + d * ff + ff * d + d * d
+        return V * d + L * (tm + cm + 4 * d) + d * V + 4 * d
+
+    if cfg.family == "hybrid":
+        w = cfg.lru_width
+        bw = w // H
+        rec = (2 * d * w + cfg.conv_width * w + w
+               + 2 * (H * bw * bw + w) + w + w * d)
+        att = attn_params()
+        per_mlp = mlp_params(ff)
+        full, trail, pat = hybrid.n_units(cfg)
+        n_rec = sum(1 for k in pat if k == "rec") * full + trail
+        n_att = sum(1 for k in pat if k == "attn") * full
+        return (V * d + n_rec * (rec + per_mlp + 2 * d)
+                + n_att * (att + per_mlp + 2 * d) + d)
+
+    if cfg.family == "encdec":
+        enc = cfg.n_enc_layers * (attn_params() + mlp_params(ff) + 2 * d)
+        cross = L * (attn_params())
+        dec = L * (attn_params() + mlp_params(ff) + 3 * d)
+        return V * d + enc + dec + cross + 2 * d + d * V
+
+    # dense / moe / vlm backbones
+    n = V * d + 2 * d  # embed + final norm
+    if not cfg.tie_embeddings:
+        n += d * V
+    m = cfg.moe
+    n_lead = m.first_dense_layers if m else 0
+    if m is not None:
+        expert = mlp_params(m.d_ff_expert)
+        router = d * m.num_experts
+        shared = m.num_shared * mlp_params(m.d_ff_shared or m.d_ff_expert)
+        active = (m.top_k * expert + router + shared + attn_params() + 2 * d)
+        total = (m.num_experts * expert + router + shared + attn_params()
+                 + 2 * d)
+        per_layer = active if active_only else total
+        n += (L - n_lead) * per_layer
+        n += n_lead * (attn_params()
+                       + mlp_params(m.first_dense_d_ff or ff) + 2 * d)
+    else:
+        n += L * (attn_params() + mlp_params(ff) + 2 * d)
+    if cfg.family == "vlm":
+        n += cfg.frontend_dim * d + d * d + 2 * d  # patch projector MLP
+    return n
+
+
+# --------------------------------------------------------------------------
+# VLM / audio frontend stubs
+# --------------------------------------------------------------------------
+
+def _init_vlm_extras(kg: KeyGen, cfg) -> dict:
+    return {
+        "proj1": dense_init(kg(), cfg.frontend_dim, cfg.d_model,
+                            cfg.np_dtype),
+        "proj2": dense_init(kg(), cfg.d_model, cfg.d_model, cfg.np_dtype),
+    }
+
+
+def _vlm_embed(params, batch, cfg):
+    """Concatenate projected patch embeddings with token embeddings."""
+    from .layers import embed
+    patches = batch["patches"]                        # (B, P, frontend_dim)
+    h = jax.nn.gelu(patches.astype(cfg.np_dtype) @ params["vlm"]["proj1"])
+    h = h @ params["vlm"]["proj2"]                    # (B, P, d)
+    tok = embed(params["embed"], batch["tokens"])     # (B, S, d)
+    return jnp.concatenate([h, tok], axis=1)
+
+
+# --------------------------------------------------------------------------
+# the Model facade
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Optional[Callable]
+    decode_step: Optional[Callable]
+    init_decode_state: Optional[Callable]
+    dummy_batch: Callable
+    input_specs: Callable
+
+
+def init_params(cfg, seed: int = 0):
+    return build_model(cfg).init(seed)
+
+
+def abstract_params(cfg, seed: int = 0):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(seed))
+
+
+def build_model(cfg) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _build_lm(cfg)
+    if fam == "encdec":
+        return _build_encdec(cfg)
+    if fam == "hybrid":
+        return _build_hybrid(cfg)
+    if fam == "ssm":
+        return _build_ssm(cfg)
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---- dense / moe / vlm ----------------------------------------------------
+
+def _build_lm(cfg) -> Model:
+    is_vlm = cfg.family == "vlm"
+
+    def init(seed=0):
+        kg = KeyGen(seed)
+        p = transformer.init_lm(kg, cfg)
+        if is_vlm:
+            p["vlm"] = _init_vlm_extras(kg, cfg)
+        return p
+
+    def forward(params, batch):
+        if is_vlm:
+            x = _vlm_embed(params, batch, cfg)
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S))
+            h, aux, _ = transformer.forward_embeds(params, x, cfg,
+                                                   positions)
+            return transformer.logits_from_hidden(params, h, cfg), aux
+        return transformer.lm_forward(params, batch["tokens"], cfg)
+
+    def loss(params, batch):
+        if is_vlm:
+            from .layers import chunked_cross_entropy
+            x = _vlm_embed(params, batch, cfg)
+            B, S, _ = x.shape
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S))
+            h, aux, _ = transformer.forward_embeds(params, x, cfg,
+                                                   positions,
+                                                   for_train=True)
+            P = batch["patches"].shape[1]
+            w = (params["embed"] if cfg.tie_embeddings
+                 else params["unembed"])
+            ce = chunked_cross_entropy(h[:, P:], w, batch["labels"],
+                                       tied=cfg.tie_embeddings)
+            return ce + 0.01 * aux
+        return transformer.lm_loss(params, batch, cfg)
+
+    def prefill(params, batch, max_len):
+        tokens = batch["tokens"]
+        if is_vlm:
+            x = _vlm_embed(params, batch, cfg)
+            B, S, _ = x.shape
+            # the cache must hold patch tokens + text (+ decode room)
+            max_len = max(max_len, S)
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S))
+            h, _, caches = transformer.forward_embeds(
+                params, x, cfg, positions, collect_cache=True)
+            lead, stack = caches
+            cache = transformer._caches_to_struct(cfg, stack, lead, B, S,
+                                                  max_len)
+            logits = transformer.logits_from_hidden(params, h[:, -1:], cfg)
+            return logits, cache, jnp.int32(S)
+        return transformer.lm_prefill(params, tokens, cfg, max_len)
+
+    def decode_step(params, cache, token, pos):
+        return transformer.lm_decode_step(params, cache, token, pos, cfg)
+
+    def init_decode_state(batch_size, max_len):
+        from .kvcache import full_cache, mla_cache
+        if cfg.mla is not None:
+            return mla_cache(cfg.n_layers, batch_size, max_len,
+                             cfg.mla.kv_lora_rank, cfg.mla.qk_rope_dim,
+                             cfg.np_dtype)
+        return full_cache(cfg.n_layers, batch_size, max_len,
+                          cfg.n_kv_heads, cfg.head_dim_, cfg.np_dtype)
+
+    def dummy_batch(shape, seed=0):
+        rng = jax.random.PRNGKey(seed)
+        B, S = shape.global_batch, shape.seq_len
+        b = {
+            "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+        }
+        if is_vlm:
+            b["patches"] = jax.random.normal(
+                rng, (B, cfg.frontend_tokens, cfg.frontend_dim),
+                jnp.float32)
+        return b
+
+    def input_specs(shape):
+        B, S = shape.global_batch, shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        if is_vlm:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+        return specs
+
+    return Model(cfg, init, loss, forward, prefill, decode_step,
+                 init_decode_state, dummy_batch, input_specs)
+
+
+# ---- encoder-decoder -------------------------------------------------------
+
+def _build_encdec(cfg) -> Model:
+    def init(seed=0):
+        return encdec.init_encdec(KeyGen(seed), cfg)
+
+    def forward(params, batch):
+        enc_out = encdec.encode(params, batch["frames"], cfg)
+        logits, _ = encdec.decode_seq(params, batch["tokens"], enc_out, cfg)
+        return logits, jnp.float32(0.0)
+
+    def loss(params, batch):
+        return encdec.encdec_loss(params, batch, cfg)
+
+    def prefill(params, batch, max_len):
+        return encdec.encdec_prefill(params, batch["frames"],
+                                     batch["tokens"], cfg, max_len)
+
+    def decode_step(params, cache, token, pos):
+        return encdec.encdec_decode_step(params, cache, token, pos, cfg)
+
+    def init_decode_state(batch_size, max_len):
+        # decoder self-attention cache + precomputed cross K/V over an
+        # encoder sequence of the same length (the decode shape's
+        # seq_len bounds both sides for the dry-run).
+        L, KVH, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+        shp = (L, batch_size, max_len, KVH, hd)
+        return {"k": jnp.zeros(shp, cfg.np_dtype),
+                "v": jnp.zeros(shp, cfg.np_dtype),
+                "ck": jnp.zeros(shp, cfg.np_dtype),
+                "cv": jnp.zeros(shp, cfg.np_dtype)}
+
+    def dummy_batch(shape, seed=0):
+        rng = jax.random.PRNGKey(seed)
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "frames": jax.random.normal(rng, (B, S, cfg.d_model),
+                                        jnp.float32),
+            "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+        }
+
+    def input_specs(shape):
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                           jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+
+    return Model(cfg, init, loss, forward, prefill, decode_step,
+                 init_decode_state, dummy_batch, input_specs)
+
+
+# ---- hybrid ----------------------------------------------------------------
+
+def _build_hybrid(cfg) -> Model:
+    def init(seed=0):
+        return hybrid.init_hybrid(KeyGen(seed), cfg)
+
+    def forward(params, batch):
+        return hybrid.hybrid_forward(params, batch["tokens"], cfg)
+
+    def loss(params, batch):
+        from .layers import chunked_cross_entropy
+        h, _ = hybrid.hybrid_forward(params, batch["tokens"], cfg,
+                                     for_train=True, return_hidden=True)
+        return chunked_cross_entropy(h, params["embed"],
+                                     batch["labels"], tied=True,
+                                     softcap=30.0)
+
+    def prefill(params, batch, max_len):
+        del max_len  # state is O(window), not O(seq)
+        logits, (unit_states, trail_states) = hybrid.hybrid_forward(
+            params, batch["tokens"], cfg, collect_state=True)
+        state = {"units": unit_states}
+        if trail_states is not None:
+            state["trail"] = trail_states
+        return logits[:, -1:], state, jnp.int32(batch["tokens"].shape[1])
+
+    def decode_step(params, state, token, pos):
+        return hybrid.hybrid_decode_step(params, state, token, pos, cfg)
+
+    def init_decode_state(batch_size, max_len):
+        del max_len
+        return hybrid.init_hybrid_state(cfg, batch_size)
+
+    def dummy_batch(shape, seed=0):
+        rng = jax.random.PRNGKey(seed)
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+        }
+
+    def input_specs(shape):
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+
+    return Model(cfg, init, loss, forward, prefill, decode_step,
+                 init_decode_state, dummy_batch, input_specs)
+
+
+# ---- ssm (rwkv) ------------------------------------------------------------
+
+def _build_ssm(cfg) -> Model:
+    def init(seed=0):
+        return ssm.init_rwkv_lm(KeyGen(seed), cfg)
+
+    def forward(params, batch):
+        return ssm.rwkv_forward(params, batch["tokens"], cfg)
+
+    def loss(params, batch):
+        from .layers import chunked_cross_entropy
+        h, _ = ssm.rwkv_forward(params, batch["tokens"], cfg,
+                                for_train=True, return_hidden=True)
+        return chunked_cross_entropy(h, params["unembed"],
+                                     batch["labels"], tied=False)
+
+    def prefill(params, batch, max_len):
+        del max_len  # O(1) state
+        return ssm.rwkv_prefill(params, batch["tokens"], cfg)
+
+    def decode_step(params, state, token, pos):
+        return ssm.rwkv_decode_step(params, state, token, pos, cfg)
+
+    def init_decode_state(batch_size, max_len):
+        del max_len
+        return ssm.init_rwkv_state(cfg, batch_size)
+
+    def dummy_batch(shape, seed=0):
+        rng = jax.random.PRNGKey(seed)
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size,
+                                         jnp.int32),
+        }
+
+    def input_specs(shape):
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+
+    return Model(cfg, init, loss, forward, prefill, decode_step,
+                 init_decode_state, dummy_batch, input_specs)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts: top-k routing with capacity-based dispatch.
+
+GShard/Switch-style formulation: dispatch and combine are dense einsums
+over (tokens, experts, capacity), which (a) lowers to all-to-alls when the
+expert axis is sharded (expert parallelism over the mesh "model" axis) and
+(b) keeps compiled FLOPs proportional to *active* experts — the quantity
+the roofline's 6·N_active·D model expects.
+
+Shared experts (DeepSeek-V2 style) are always-on MLPs added to the routed
+output. A Switch-style load-balance auxiliary loss is returned to the
+trainer.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import KeyGen, dense_init
+
+
+def init_moe(kg: KeyGen, cfg) -> dict:
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    p = {
+        "router": dense_init(kg(), d, E, cfg.np_dtype, scale=0.02),
+        "wi_gate": jnp.stack([dense_init(kg(), d, ff, cfg.np_dtype)
+                              for _ in range(E)]),
+        "wi_up": jnp.stack([dense_init(kg(), d, ff, cfg.np_dtype)
+                            for _ in range(E)]),
+        "wo": jnp.stack([dense_init(kg(), ff, d, cfg.np_dtype)
+                         for _ in range(E)]),
+    }
+    if m.num_shared:
+        sff = m.d_ff_shared or ff
+        p["shared"] = {
+            "wi_gate": jnp.stack([dense_init(kg(), d, sff, cfg.np_dtype)
+                                  for _ in range(m.num_shared)]),
+            "wi_up": jnp.stack([dense_init(kg(), d, sff, cfg.np_dtype)
+                                for _ in range(m.num_shared)]),
+            "wo": jnp.stack([dense_init(kg(), sff, d, cfg.np_dtype)
+                             for _ in range(m.num_shared)]),
+        }
+    return p
+
+
+def _routing(logits: jnp.ndarray, top_k: int, capacity: int):
+    """Build (combine, dispatch) tensors, plus aux load-balance loss.
+
+    logits: (T, E). combine: (T, E, C) fp32 routing weights; dispatch:
+    same-shape boolean. Tokens overflowing an expert's capacity are
+    dropped for that expert (standard capacity-factor semantics).
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)          # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, k) assignment inside its expert queue.
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (T, k, E)
+    flat = onehot.reshape(T * top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - 1.0                  # (T*k, E)
+    pos_in_e = (pos * flat).sum(-1).reshape(T, top_k)     # (T, k)
+    keep = pos_in_e < capacity
+
+    # Scatter into (T, E, C).
+    pos_c = jnp.clip(pos_in_e, 0, capacity - 1).astype(jnp.int32)
+    cap_oh = jax.nn.one_hot(pos_c, capacity, dtype=jnp.float32)  # (T,k,C)
+    w = (top_p * keep)[..., None, None] * onehot[..., None] * \
+        cap_oh[:, :, None, :]                             # (T,k,E,C)
+    combine = w.sum(axis=1)                               # (T, E, C)
+    dispatch = combine > 0
+
+    # Switch aux loss: E * sum_e fraction_tokens_e * mean_prob_e.
+    me = probs.mean(axis=0)                               # (E,)
+    ce = onehot.sum(axis=1).mean(axis=0)                  # (E,)
+    aux = E * jnp.sum(me * ce) / top_k
+    return combine, dispatch, aux
+
+
+def _expert_mlp(wi_gate, wi_up, wo, xin):
+    """xin: (E, C, d) -> (E, C, d), per-expert SwiGLU."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wi_gate))
+    u = jnp.einsum("ecd,edf->ecf", xin, wi_up)
+    return jnp.einsum("ecf,efd->ecd", g * u, wo)
+
+
+def moe_mlp(p: dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar).
+
+    Tokens are routed in fixed-size GROUPS (GShard's group dimension):
+    capacity is per-group, so the (G, Sg, E, C) dispatch/combine tensors
+    scale LINEARLY in total tokens (C ~ Sg*k/E, fixed) instead of the
+    quadratic T*E*(T*k/E) of ungrouped routing — measured 27.7 -> fits
+    on the granite train_4k cell (§Perf). The group axis also gives SPMD
+    a clean data-parallel dim for the dispatch einsums (EP all-to-alls).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    group = min(getattr(m, "group_size", 4096) or 4096, T)
+    pad = (-T) % group
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    G = xt.shape[0] // group
+    xg = xt.reshape(G, group, d)
+    capacity = max(1, int(m.capacity_factor * group * m.top_k
+                          / m.num_experts))
+    logits = xg @ p["router"]                            # (G, Sg, E)
+    combine, dispatch, aux = jax.vmap(
+        lambda lg: _routing(lg, m.top_k, capacity))(logits)
+    aux = aux.mean()
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xg.dtype), xg)
+    out_e = jax.vmap(
+        lambda xe: _expert_mlp(p["wi_gate"], p["wi_up"], p["wo"], xe))(xin)
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(xg.dtype), out_e)
+    out = out.reshape(-1, d)
+    if m.num_shared:
+        sh = p["shared"]
+        g = jax.nn.silu(jnp.einsum("td,ndf->ntf", xt, sh["wi_gate"]))
+        u = jnp.einsum("td,ndf->ntf", xt, sh["wi_up"])
+        out = out + jnp.einsum("ntf,nfd->td", g * u, sh["wo"])
+    if pad:
+        out = out[:T]
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,58 @@
+"""Activation-sharding hints (sequence parallelism), context-scoped.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, "residual")`` at
+layer boundaries; drivers opt in by installing a policy (a dict kind ->
+PartitionSpec) under an active mesh. Without a policy the call is a
+no-op, so tests and single-device runs are untouched.
+
+Why it exists (measured in EXPERIMENTS.md §Perf): with per-layer remat,
+the live set is one residual activation per layer. Unconstrained, those
+replicate across the model axis — 80 x (B_loc, S, d) at qwen-110b scale
+is ~80 GB/device. Constraining the sequence axis onto "model" (Megatron-
+style sequence parallelism; XLA inserts the all-gather/reduce-scatter
+pair around attention/MLP) divides that by the TP width.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+
+_POLICY: Dict[str, object] = {}
+
+
+@contextlib.contextmanager
+def activation_policy(policy: Dict[str, object]):
+    """policy: {"residual": PartitionSpec(batch, seq, feature), ...}"""
+    global _POLICY
+    old = _POLICY
+    _POLICY = dict(policy)
+    try:
+        yield
+    finally:
+        _POLICY = old
+
+
+def constrain(x, kind: str = "residual"):
+    sharding = _POLICY.get(kind)
+    if sharding is None:
+        return x
+    # accept NamedSharding (preferred — carries its mesh) or PartitionSpec
+    spec = getattr(sharding, "spec", sharding)
+    if x.ndim != len(spec):
+        return x
+    mesh = getattr(sharding, "mesh", None)
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for dim, ax in zip(x.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            prod = 1
+            for a in axes:
+                prod *= sizes.get(a, 1)
+            if dim % prod != 0:
+                return x   # not divisible: leave layout to the compiler
+    return jax.lax.with_sharding_constraint(x, sharding)

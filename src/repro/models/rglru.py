@@ -1,0 +1,139 @@
+"""RG-LRU recurrent blocks (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t), c = 8, and per-channel gates
+r_t, i_t produced by block-diagonal projections (num_heads blocks).
+
+Training/prefill evaluates the linear recurrence with
+jax.lax.associative_scan (log-depth — the TPU-native choice); decode is a
+single fused step carrying (h, conv tail). A 1:2 attn:recurrent pattern
+and a short causal depthwise conv (width 4) complete the temporal-mixing
+block, per the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import KeyGen, dense_init
+
+_C = 8.0
+
+
+def init_rglru(kg: KeyGen, cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    nh = cfg.n_heads
+    bw = w // nh
+    return {
+        "w_in_x": dense_init(kg(), d, w, cfg.np_dtype),
+        "w_in_g": dense_init(kg(), d, w, cfg.np_dtype),
+        "conv_w": (jax.random.normal(kg(), (cfg.conv_width, w)) * 0.1
+                   ).astype(cfg.np_dtype),
+        "conv_b": jnp.zeros((w,), cfg.np_dtype),
+        # block-diagonal gate projections: (heads, bw, bw)
+        "w_a": jnp.stack([dense_init(kg(), bw, bw, cfg.np_dtype)
+                          for _ in range(nh)]),
+        "b_a": jnp.zeros((w,), cfg.np_dtype),
+        "w_x": jnp.stack([dense_init(kg(), bw, bw, cfg.np_dtype)
+                          for _ in range(nh)]),
+        "b_x": jnp.zeros((w,), cfg.np_dtype),
+        # Lambda parametrized so a ~ U(0.9, 0.999) at init (paper App.)
+        "lam": jnp.asarray(
+            jnp.linspace(2.0, 6.0, w), cfg.np_dtype),
+        "w_out": dense_init(kg(), w, d, cfg.np_dtype),
+    }
+
+
+def _block_diag(x, w, nh):
+    """x (..., W) @ blockdiag(w): w (nh, bw, bw)."""
+    shp = x.shape
+    xb = x.reshape(*shp[:-1], nh, shp[-1] // nh)
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return yb.reshape(shp)
+
+
+def _gates(p, x, nh):
+    r = jax.nn.sigmoid(_block_diag(x, p["w_a"], nh) + p["b_a"])
+    i = jax.nn.sigmoid(_block_diag(x, p["w_x"], nh) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * \
+        r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # multiplier on the input branch; a^2 from log-space for stability
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta, i.astype(jnp.float32)
+
+
+def rglru_scan(p: dict, x: jnp.ndarray, cfg, h0=None):
+    """x: (B, S, W). Linear recurrence via associative_scan over S.
+
+    Returns (y (B,S,W) in x.dtype, h_last (B,W) fp32).
+    """
+    B, S, W = x.shape
+    a, beta, i = _gates(p, x, cfg.n_heads)
+    b = beta * i * x.astype(jnp.float32)
+    if h0 is not None:
+        # Fold the carried state into the first step: h_1 = a_1 h_0 + b_1.
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    A, Bv = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = Bv                                     # h_t for every t
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p: dict, x_t: jnp.ndarray, h: jnp.ndarray, cfg):
+    """Single decode step. x_t: (B, W); h: (B, W) fp32."""
+    a, beta, i = _gates(p, x_t[:, None], cfg.n_heads)
+    a, beta, i = a[:, 0], beta[:, 0], i[:, 0]
+    h_new = a * h + beta * i * x_t.astype(jnp.float32)
+    return h_new.astype(x_t.dtype), h_new
+
+
+def causal_conv(p: dict, x: jnp.ndarray, tail=None):
+    """Depthwise causal conv, width cw. x: (B,S,W); tail: (B,cw-1,W).
+
+    Returns (y (B,S,W), new_tail (B,cw-1,W)).
+    """
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)            # (B, S+cw-1, W)
+    y = sum(xp[:, k:k + x.shape[1]] * p["conv_w"][k]
+            for k in range(cw))
+    y = y + p["conv_b"]
+    new_tail = xp[:, -(cw - 1):]
+    return y.astype(x.dtype), new_tail
+
+
+def recurrent_block_seq(p: dict, x: jnp.ndarray, cfg, state=None):
+    """Full Griffin recurrent temporal block, sequence mode.
+
+    x: (B, S, d_model). state: None or {"h": (B,W), "conv": (B,cw-1,W)}.
+    Returns (out (B,S,d_model), new_state).
+    """
+    gate = jax.nn.gelu(x @ p["w_in_g"])
+    xb = x @ p["w_in_x"]
+    xb, tail = causal_conv(p, xb, state["conv"] if state else None)
+    h, h_last = rglru_scan(p, xb, cfg, h0=state["h"] if state else None)
+    out = (h * gate) @ p["w_out"]
+    return out, {"h": h_last, "conv": tail}
+
+
+def recurrent_block_step(p: dict, x_t: jnp.ndarray, cfg, state):
+    """Decode step. x_t: (B, 1, d_model)."""
+    xt = x_t[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_in_g"])
+    xb = xt @ p["w_in_x"]
+    # conv with cached tail
+    tail = state["conv"]                                # (B, cw-1, W)
+    cw = p["conv_w"].shape[0]
+    xcat = jnp.concatenate([tail, xb[:, None]], axis=1)  # (B, cw, W)
+    y = sum(xcat[:, k] * p["conv_w"][k] for k in range(cw)) + p["conv_b"]
+    new_tail = xcat[:, 1:]
+    h_out, h_new = rglru_step(p, y.astype(xb.dtype), state["h"], cfg)
+    out = (h_out * gate) @ p["w_out"]
+    return out[:, None], {"h": h_new, "conv": new_tail}

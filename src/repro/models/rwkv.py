@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay, plus squared-ReLU channel-mix.
+
+Time-mix core (per head, head_size hd):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: hd x hd, fp32)
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+with w_t = exp(-exp(decay_t)) data-dependent per channel, u the "bonus"
+for the current token, and the v6 ddlerp token-shift (a LoRA on the
+interpolation between x_t and x_{t-1}) producing the five mix inputs.
+
+Sequence mode runs a lax.scan over time carrying S (the O(1)-state
+property that makes the 512k-decode cell feasible); decode is the same
+body on a single step.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import KeyGen, dense_init
+
+
+def init_time_mix(kg: KeyGen, cfg) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    dd = cfg.rwkv_ddlora
+    wd = cfg.rwkv_decay_lora
+    dt = cfg.np_dtype
+    u01 = lambda: (jax.random.uniform(kg(), (d,)) * 0.5 + 0.25).astype(dt)
+    return {
+        "maa_x": u01(), "maa_w": u01(), "maa_k": u01(), "maa_v": u01(),
+        "maa_r": u01(), "maa_g": u01(),
+        "maa_w1": dense_init(kg(), d, 5 * dd, dt, scale=0.01),
+        "maa_w2": (jax.random.normal(kg(), (5, dd, d)) * 0.01).astype(dt),
+        "decay": (jax.random.normal(kg(), (d,)) * 0.5 - 4.0).astype(dt),
+        "decay_w1": dense_init(kg(), d, wd, dt, scale=0.01),
+        "decay_w2": dense_init(kg(), wd, d, dt, scale=0.01),
+        "bonus": (jax.random.normal(kg(), (H, hd)) * 0.1).astype(dt),
+        "w_r": dense_init(kg(), d, d, dt),
+        "w_k": dense_init(kg(), d, d, dt),
+        "w_v": dense_init(kg(), d, d, dt),
+        "w_g": dense_init(kg(), d, d, dt),
+        "w_o": dense_init(kg(), d, d, dt),
+        "ln_x_scale": jnp.ones((d,), dt),
+        "ln_x_bias": jnp.zeros((d,), dt),
+    }
+
+
+def init_channel_mix(kg: KeyGen, cfg) -> dict:
+    d, ff, dt = cfg.d_model, cfg.d_ff, cfg.np_dtype
+    u01 = lambda: (jax.random.uniform(kg(), (d,)) * 0.5 + 0.25).astype(dt)
+    return {
+        "maa_k": u01(), "maa_r": u01(),
+        "w_k": dense_init(kg(), d, ff, dt),
+        "w_v": dense_init(kg(), ff, d, dt),
+        "w_r": dense_init(kg(), d, d, dt),
+    }
+
+
+def _ddlerp(p, x, sx):
+    """v6 data-dependent token-shift: five mixed variants of x.
+
+    x, sx: (B, T, d) with sx = x_{t-1} - x_t. Returns (xw,xk,xv,xr,xg).
+    """
+    xxx = x + sx * p["maa_x"]
+    a = jnp.tanh(xxx @ p["maa_w1"])                     # (B,T,5*dd)
+    B_, T_, _ = a.shape
+    dd = p["maa_w2"].shape[1]
+    a = a.reshape(B_, T_, 5, dd)
+    m = jnp.einsum("btfd,fdo->btfo", a, p["maa_w2"])    # (B,T,5,d)
+    mw, mk, mv, mr, mg = [m[:, :, i] for i in range(5)]
+    xw = x + sx * (p["maa_w"] + mw)
+    xk = x + sx * (p["maa_k"] + mk)
+    xv = x + sx * (p["maa_v"] + mv)
+    xr = x + sx * (p["maa_r"] + mr)
+    xg = x + sx * (p["maa_g"] + mg)
+    return xw, xk, xv, xr, xg
+
+
+def _group_norm(p, y, H, hd):
+    """Per-head LayerNorm of the wkv output. y: (B,T,H,hd)."""
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(*y.shape[:-2], H * hd)
+    return yn * p["ln_x_scale"].astype(jnp.float32) + \
+        p["ln_x_bias"].astype(jnp.float32)
+
+
+def wkv6_scan(r, k, v, w, u, S0=None, *, chunk: int = 128):
+    """The WKV-6 recurrence over a sequence, chunk-rematerialized.
+
+    r,k,v,w: (B,T,H,hd); u: (H,hd); S0: (B,H,hd,hd) fp32 or None.
+    Returns (y (B,T,H,hd) fp32, S_last).
+
+    A flat differentiated scan checkpoints the (B,H,hd,hd) state at every
+    timestep (T x state = GBs at train_4k). Instead the outer scan runs
+    over chunks with a jax.checkpoint'd inner scan: only chunk-boundary
+    states are saved, in-chunk states recompute in backward — the same
+    trade the layer stack makes (and the paper's O5 batching shape:
+    bounded live-set, amortized writes).
+    """
+    B, T, H, hd = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S + kv
+        return S_new, y
+
+    chunk = max(1, min(chunk, T))
+    if T % chunk != 0:      # uneven tail: fall back to the flat scan
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+        S_last, ys = jax.lax.scan(step, S0, xs)
+        return jnp.moveaxis(ys, 0, 1), S_last
+
+    n_chunks = T // chunk
+    # (n_chunks, chunk, B, H, hd)
+    xs = tuple(
+        jnp.moveaxis(t, 1, 0).reshape(n_chunks, chunk, B, H, hd)
+        for t in (rf, kf, vf, wf))
+
+    @jax.checkpoint
+    def chunk_body(S, xs_c):
+        return jax.lax.scan(step, S, xs_c)
+
+    S_last, ys = jax.lax.scan(chunk_body, S0, xs)
+    ys = ys.reshape(T, B, H, hd)
+    return jnp.moveaxis(ys, 0, 1), S_last
+
+
+def time_mix_seq(p: dict, x: jnp.ndarray, cfg, state=None):
+    """x: (B,T,d). state: None or {"S": (B,H,hd,hd), "x_tm": (B,d)}.
+
+    Returns (out (B,T,d), new_state pieces (S_last, last_x)).
+    """
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    prev = state["x_tm"][:, None] if state else jnp.zeros((B, 1, d), x.dtype)
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xw, xk, xv, xr, xg = _ddlerp(p, x, sx)
+    r = (xr @ p["w_r"]).reshape(B, T, H, hd)
+    k = (xk @ p["w_k"]).reshape(B, T, H, hd)
+    v = (xv @ p["w_v"]).reshape(B, T, H, hd)
+    g = jax.nn.silu(xg @ p["w_g"])
+    decay = p["decay"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]).astype(jnp.float32)
+    wt = jnp.exp(-jnp.exp(decay)).reshape(B, T, H, hd)
+    u = p["bonus"].astype(jnp.float32)
+    y, S_last = wkv6_scan(r, k, v, wt, u,
+                          state["S"] if state else None)
+    y = _group_norm(p, y, H, hd).astype(x.dtype)
+    out = (y * g) @ p["w_o"]
+    return out, {"S": S_last, "x_tm": x[:, -1]}
+
+
+def channel_mix_seq(p: dict, x: jnp.ndarray, state=None):
+    """Squared-ReLU channel mix. state: {"x_cm": (B,d)} or None."""
+    B, T, d = x.shape
+    prev = state["x_cm"][:, None] if state else jnp.zeros((B, 1, d), x.dtype)
+    x_prev = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    sx = x_prev - x
+    xk = x + sx * p["maa_k"]
+    xr = x + sx * p["maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"])
+    return out, {"x_cm": x[:, -1]}

@@ -1,0 +1,119 @@
+"""RWKV-6 LM assembly (attention-free stack, scanned over layers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import pshint, rwkv
+from .layers import (
+    KeyGen, apply_norm, embed, embed_init, init_norm, unembed,
+ remat_policy,
+)
+from .transformer import stack_layers
+
+
+def _init_layer(kg: KeyGen, cfg) -> dict:
+    return {
+        "ln_t": init_norm("layernorm", cfg.d_model, cfg.np_dtype),
+        "ln_c": init_norm("layernorm", cfg.d_model, cfg.np_dtype),
+        "tm": rwkv.init_time_mix(kg, cfg),
+        "cm": rwkv.init_channel_mix(kg, cfg),
+    }
+
+
+def init_rwkv_lm(kg: KeyGen, cfg) -> dict:
+    return {
+        "embed": embed_init(kg(), cfg.vocab_size, cfg.d_model, cfg.np_dtype),
+        "ln_in": init_norm("layernorm", cfg.d_model, cfg.np_dtype),
+        "ln_f": init_norm("layernorm", cfg.d_model, cfg.np_dtype),
+        "layers": stack_layers([_init_layer(kg, cfg)
+                                for _ in range(cfg.n_layers)]),
+        "unembed": (jax.random.normal(kg(), (cfg.d_model, cfg.vocab_size))
+                    * 0.02).astype(cfg.np_dtype),
+    }
+
+
+def rwkv_forward(params: dict, tokens: jnp.ndarray, cfg,
+                 *, for_train: bool = False, return_hidden: bool = False):
+    x = embed(params["embed"], tokens)
+    x = apply_norm("layernorm", params["ln_in"], x)
+
+    def body(h, lp):
+        hn = apply_norm("layernorm", lp["ln_t"], h)
+        out, _ = rwkv.time_mix_seq(lp["tm"], hn, cfg)
+        h = h + out
+        hn = apply_norm("layernorm", lp["ln_c"], h)
+        out, _ = rwkv.channel_mix_seq(lp["cm"], hn)
+        h = h + out
+        h = pshint.constrain(h, "residual")
+        return h, None
+
+    fn = body
+    if cfg.remat and for_train:
+        fn = jax.checkpoint(body,
+                            policy=remat_policy(cfg))
+    x, _ = jax.lax.scan(fn, x, params["layers"])
+    x = apply_norm("layernorm", params["ln_f"], x)
+    if return_hidden:
+        return x, jnp.float32(0.0)
+    return unembed(params["unembed"], x, tied=False), jnp.float32(0.0)
+
+
+def init_rwkv_state(cfg, batch):
+    from .kvcache import rwkv_state
+    H = cfg.d_model // cfg.rwkv_head_size
+    return rwkv_state(cfg.n_layers, batch, H, cfg.rwkv_head_size,
+                      cfg.d_model, cfg.np_dtype)
+
+
+def rwkv_prefill(params: dict, tokens: jnp.ndarray, cfg):
+    """Run the sequence and return (last logits, state, pos)."""
+    x = embed(params["embed"], tokens)
+    x = apply_norm("layernorm", params["ln_in"], x)
+
+    def body(h, lp):
+        hn = apply_norm("layernorm", lp["ln_t"], h)
+        out, tm_state = rwkv.time_mix_seq(lp["tm"], hn, cfg)
+        h = h + out
+        hn = apply_norm("layernorm", lp["ln_c"], h)
+        out, cm_state = rwkv.channel_mix_seq(lp["cm"], hn)
+        h = h + out
+        return h, {"S": tm_state["S"], "x_tm": tm_state["x_tm"],
+                   "x_cm": cm_state["x_cm"]}
+
+    x, state = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm("layernorm", params["ln_f"], x)
+    logits = unembed(params["unembed"], x[:, -1:], tied=False)
+    return logits, state, jnp.int32(tokens.shape[1])
+
+
+def rwkv_decode_step(params: dict, state: dict, token: jnp.ndarray, pos,
+                     cfg):
+    """One token through the stack; state threaded by the layer scan.
+
+    The per-step cost is O(1) in sequence length — the property that makes
+    the long_500k cell runnable for this family.
+    """
+    del pos  # RWKV state carries all positional information
+    x = embed(params["embed"], token)
+    x = apply_norm("layernorm", params["ln_in"], x)
+
+    def body(h, xs):
+        lp, st = xs
+        hn = apply_norm("layernorm", lp["ln_t"], h)
+        out, tm_state = rwkv.time_mix_seq(
+            lp["tm"], hn, cfg, state={"S": st["S"], "x_tm": st["x_tm"]})
+        h = h + out
+        hn = apply_norm("layernorm", lp["ln_c"], h)
+        out, cm_state = rwkv.channel_mix_seq(
+            lp["cm"], hn, state={"x_cm": st["x_cm"]})
+        h = h + out
+        new_st = {"S": tm_state["S"], "x_tm": tm_state["x_tm"],
+                  "x_cm": cm_state["x_cm"]}
+        return h, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = apply_norm("layernorm", params["ln_f"], x)
+    logits = unembed(params["unembed"], x, tied=False)
+    return logits, new_state

@@ -1,0 +1,321 @@
+"""Decoder-only transformer assembly: dense / MoE / MLA families.
+
+Layers are stacked (leading L axis) and driven by lax.scan — compile time
+and HLO size stay O(1) in depth, which is what makes the 80-95 layer
+dry-run cells compile quickly. Per-layer activation checkpointing
+(jax.checkpoint) is applied under cfg.remat for training.
+
+The layer-invariant RoPE angle table is computed ONCE per step and closed
+over by the scanned body (the paper's O2 hoisting discipline applied to
+the LM stack — see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import pshint
+from .layers import (
+    KeyGen,
+    apply_norm,
+    chunked_cross_entropy,
+    cross_entropy,
+    dense_init,
+    embed,
+    embed_init,
+    init_mlp,
+    init_norm,
+    mlp,
+    rope_freqs,
+    unembed,
+ remat_policy,
+)
+from .moe import init_moe, moe_mlp
+
+
+# --------------------------------------------------------------------------
+# block init
+# --------------------------------------------------------------------------
+
+def init_block(kg: KeyGen, cfg, *, use_moe: bool) -> dict:
+    p = {
+        "ln_attn": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "ln_mlp": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+    }
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(kg, cfg)
+    else:
+        p["attn"] = attn.init_gqa(kg, cfg)
+    if use_moe:
+        p["moe"] = init_moe(kg, cfg)
+    else:
+        p["mlp"] = init_mlp(kg, cfg.d_model, cfg.d_ff, cfg.np_dtype,
+                            cfg.activation)
+    return p
+
+
+def stack_layers(blocks):
+    """List of per-layer param trees -> stacked tree (leading L axis)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_lm(kg: KeyGen, cfg) -> dict:
+    m = cfg.moe
+    n_dense_lead = m.first_dense_layers if m else 0
+    n_stack = cfg.n_layers - n_dense_lead
+    params = {
+        "embed": embed_init(kg(), cfg.vocab_size, cfg.d_model, cfg.np_dtype),
+        "ln_f": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+        "layers": stack_layers(
+            [init_block(kg, cfg, use_moe=m is not None)
+             for _ in range(n_stack)]),
+    }
+    if n_dense_lead:
+        dense_cfg_ff = m.first_dense_d_ff or cfg.d_ff
+        lead = []
+        for _ in range(n_dense_lead):
+            p = {
+                "ln_attn": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+                "ln_mlp": init_norm(cfg.norm, cfg.d_model, cfg.np_dtype),
+                "attn": (attn.init_mla(kg, cfg) if cfg.mla is not None
+                         else attn.init_gqa(kg, cfg)),
+                "mlp": init_mlp(kg, cfg.d_model, dense_cfg_ff,
+                                cfg.np_dtype, cfg.activation),
+            }
+            lead.append(p)
+        params["lead_layers"] = stack_layers(lead)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(kg(), cfg.d_model, cfg.vocab_size,
+                                       cfg.np_dtype, scale=0.02)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block apply (sequence mode: train / prefill)
+# --------------------------------------------------------------------------
+
+def _attn_seq(p, x, cfg, positions, inv_freq, *, collect_cache: bool):
+    h = apply_norm(cfg.norm, p["ln_attn"], x)
+    if cfg.mla is not None:
+        out, cache = attn.mla_prefill(p["attn"], h, cfg, positions, inv_freq)
+    else:
+        out, cache = attn.gqa_prefill(p["attn"], h, cfg, positions, inv_freq)
+    x = x + out
+    return x, (cache if collect_cache else None)
+
+
+def _mlp_block(p, x, cfg, *, use_moe: bool):
+    h = apply_norm(cfg.norm, p["ln_mlp"], x)
+    if use_moe:
+        out, aux = moe_mlp(p["moe"], h, cfg)
+    else:
+        out, aux = mlp(p["mlp"], h, cfg.activation), jnp.float32(0.0)
+    return x + out, aux
+
+
+def block_seq(p, x, cfg, positions, inv_freq, *, use_moe: bool,
+              collect_cache: bool):
+    x, cache = _attn_seq(p, x, cfg, positions, inv_freq,
+                         collect_cache=collect_cache)
+    x, aux = _mlp_block(p, x, cfg, use_moe=use_moe)
+    return x, aux, cache
+
+
+# --------------------------------------------------------------------------
+# forward over the whole stack (sequence mode)
+# --------------------------------------------------------------------------
+
+def forward_embeds(params: dict, x: jnp.ndarray, cfg, positions,
+                   *, collect_cache: bool = False, for_train: bool = False):
+    """Run the layer stack on embedded inputs x (B, S, d).
+
+    Returns (hidden, aux_loss, caches|None). caches, when collected, have
+    a stacked leading layer axis matching kvcache layouts.
+    """
+    use_moe = cfg.moe is not None
+    inv_freq = rope_freqs(
+        cfg.mla.qk_rope_dim if cfg.mla is not None else cfg.head_dim_,
+        cfg.rope_theta)
+
+    def layer_body(carry, lp):
+        h, aux = carry
+        h, aux2, cache = block_seq(lp, h, cfg, positions, inv_freq,
+                                   use_moe=use_moe,
+                                   collect_cache=collect_cache)
+        # Sequence-parallel residual constraint (no-op without a policy).
+        h = pshint.constrain(h, "residual")
+        return (h, aux + aux2), cache
+
+    fn = layer_body
+    if cfg.remat and for_train:
+        fn = jax.checkpoint(layer_body,
+                            policy=remat_policy(cfg))
+
+    aux0 = jnp.float32(0.0)
+    # Leading dense layers (DeepSeek-V2 pattern) — plain MLP, no MoE.
+    lead_caches = None
+    if "lead_layers" in params:
+        def lead_body(carry, lp):
+            h, aux = carry
+            h, c = _attn_seq(lp, h, cfg, positions, inv_freq,
+                             collect_cache=collect_cache)
+            h, a2 = _mlp_block(lp, h, cfg, use_moe=False)
+            return (h, aux + a2), c
+        lfn = lead_body
+        if cfg.remat and for_train:
+            lfn = jax.checkpoint(
+                lead_body, policy=remat_policy(cfg))
+        (x, aux0), lead_caches = jax.lax.scan(lfn, (x, aux0),
+                                              params["lead_layers"])
+
+    (x, aux), caches = jax.lax.scan(fn, (x, aux0), params["layers"])
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    if collect_cache:
+        return x, aux, (lead_caches, caches)
+    return x, aux, None
+
+
+def logits_from_hidden(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x, tied=True)
+    return unembed(params["unembed"], x, tied=False)
+
+
+def lm_forward(params: dict, tokens: jnp.ndarray, cfg,
+               *, for_train: bool = False):
+    """tokens (B, S) -> (logits (B,S,V) fp32, aux_loss)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux, _ = forward_embeds(params, x, cfg, positions,
+                               for_train=for_train)
+    return logits_from_hidden(params, x, cfg), aux
+
+
+def lm_hidden(params: dict, tokens: jnp.ndarray, cfg,
+              *, for_train: bool = False):
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, aux, _ = forward_embeds(params, x, cfg, positions,
+                               for_train=for_train)
+    return x, aux
+
+
+def lm_loss(params: dict, batch: dict, cfg) -> jnp.ndarray:
+    h, aux = lm_hidden(params, batch["tokens"], cfg, for_train=True)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    loss = chunked_cross_entropy(h, w, batch["labels"],
+                                 tied=cfg.tie_embeddings)
+    return loss + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# prefill / decode
+# --------------------------------------------------------------------------
+
+def lm_prefill(params: dict, tokens: jnp.ndarray, cfg, max_len: int):
+    """Prefill: returns (last-position logits, cache dict, pos)."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x, _, caches = forward_embeds(params, x, cfg, positions,
+                                  collect_cache=True)
+    lead_caches, stack_caches = caches
+    cache = _caches_to_struct(cfg, stack_caches, lead_caches, B, S, max_len)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)
+    return logits, cache, jnp.int32(S)
+
+
+def _caches_to_struct(cfg, stack_caches, lead_caches, B, S, max_len):
+    """Pad collected per-layer (k,v) or (c,kr) to max_len along time."""
+    def pad_time(a):
+        pad = max_len - a.shape[2]
+        cfgd = [(0, 0)] * a.ndim
+        cfgd[2] = (0, pad)
+        return jnp.pad(a, cfgd)
+
+    def cat(lead, stk):
+        if lead is None:
+            return stk
+        return jnp.concatenate([lead, stk], axis=0)
+
+    if cfg.mla is not None:
+        c = cat(lead_caches[0] if lead_caches else None, stack_caches[0])
+        kr = cat(lead_caches[1] if lead_caches else None, stack_caches[1])
+        return {"c": pad_time(c), "kr": pad_time(kr)}
+    k = cat(lead_caches[0] if lead_caches else None, stack_caches[0])
+    v = cat(lead_caches[1] if lead_caches else None, stack_caches[1])
+    return {"k": pad_time(k), "v": pad_time(v)}
+
+
+def lm_decode_step(params: dict, cache: dict, token: jnp.ndarray, pos,
+                   cfg):
+    """token (B, 1) int32; pos () int32. Returns (logits, new_cache)."""
+    B = token.shape[0]
+    x = embed(params["embed"], token)
+    use_moe = cfg.moe is not None
+    inv_freq = rope_freqs(
+        cfg.mla.qk_rope_dim if cfg.mla is not None else cfg.head_dim_,
+        cfg.rope_theta)
+    n_lead = cfg.moe.first_dense_layers if cfg.moe else 0
+
+    def dec_block(p, h, cache_l, *, moe_layer: bool):
+        # Anchor the per-layer cache slice inside the scan body so value
+        # hoisting cannot move cache-wide converts out of the loop.
+        # (The XLA *CPU* backend still lowers the bf16 cache DUS as an
+        # upcast-update-downcast over the whole stack — a +10.7 GB/dev
+        # measurement artifact of this container, absent on TPU where
+        # bf16 DUS is native; quantified in EXPERIMENTS.md §Perf.)
+        cache_l = jax.lax.optimization_barrier(cache_l)
+        hn = apply_norm(cfg.norm, p["ln_attn"], h)
+        if cfg.mla is not None:
+            out, (c2, kr2) = attn.mla_decode(
+                p["attn"], hn, cfg, pos, cache_l["c"], cache_l["kr"],
+                inv_freq)
+            new_cache = {"c": c2, "kr": kr2}
+        else:
+            out, (k2, v2) = attn.gqa_decode(
+                p["attn"], hn, cfg, pos, cache_l["k"], cache_l["v"],
+                inv_freq)
+            new_cache = {"k": k2, "v": v2}
+        h = h + out
+        h, _ = _mlp_block(p, h, cfg, use_moe=moe_layer)
+        return h, new_cache
+
+    # Lead (dense) layers then the homogeneous stack, both scanned.
+    if n_lead:
+        lead_cache = jax.tree_util.tree_map(lambda a: a[:n_lead], cache)
+        stack_cache = jax.tree_util.tree_map(lambda a: a[n_lead:], cache)
+
+        def lead_body(h, xs):
+            lp, cl = xs
+            h, nc = dec_block(lp, h, cl, moe_layer=False)
+            return h, nc
+
+        x, new_lead = jax.lax.scan(lead_body, x,
+                                   (params["lead_layers"], lead_cache))
+    else:
+        stack_cache = cache
+        new_lead = None
+
+    def body(h, xs):
+        lp, cl = xs
+        h, nc = dec_block(lp, h, cl, moe_layer=use_moe)
+        return h, nc
+
+    x, new_stack = jax.lax.scan(body, x, (params["layers"], stack_cache))
+    if new_lead is not None:
+        new_cache = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), new_lead,
+            new_stack)
+    else:
+        new_cache = new_stack
+    x = apply_norm(cfg.norm, params["ln_f"], x)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, new_cache

@@ -1,0 +1,7 @@
+from .optimizer import adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401
+from .grad import (  # noqa: F401
+    accumulate_gradients,
+    compress_int8,
+    decompress_int8,
+)

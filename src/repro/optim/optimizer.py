@@ -1,0 +1,78 @@
+"""AdamW (decoupled weight decay) on parameter pytrees.
+
+Optimizer state is kept in fp32 regardless of the param dtype (mixed-
+precision discipline); the sharding layer places m/v on the same mesh
+axes as the parameters, so state memory scales down with both the FSDP
+and TP axes (ZeRO-style for free, see launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    """Returns (new_params, new_state). lr may be a traced scalar."""
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * gf * gf
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        # Decoupled weight decay on matrices only (ndim >= 2), the usual
+        # no-decay-on-norms/bias convention.
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, global_norm)."""
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads)
+    gn = jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.float32(0)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), gn
+
+
+def sgd_update(params, grads, *, lr):
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)

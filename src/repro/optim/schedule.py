@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, base_lr: float, warmup_steps: int,
+                  total_steps: int, min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio * base_lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.maximum(warmup_steps, 1)
+    warm_lr = base_lr * step / warm
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos_lr = base_lr * (min_ratio + (1 - min_ratio)
+                        * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm_lr, cos_lr)

@@ -1,0 +1,59 @@
+"""Elastic re-meshing: continue a run on a different device count.
+
+Because (a) parameters are checkpointed as full logical arrays (shard-
+agnostic), (b) sharding rules are pure functions of (param path, mesh),
+and (c) the data pipeline's global batch is host-count independent, a
+restart on K' != K devices is: build new mesh -> recompute PartitionSpecs
+-> device_put the restored pytree. ``remesh_plan`` picks the new mesh
+shape; ``reshard_tree`` executes placement.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+
+def remesh_plan(n_devices: int, *, model_parallel: int) -> Tuple[int, ...]:
+    """Largest (data, model) mesh fitting n_devices.
+
+    Keeps the model axis fixed (param layouts keep working), shrinks or
+    grows the data axis — the elastic dimension. Leftover devices idle
+    (spares for the next failure).
+    """
+    if n_devices < model_parallel:
+        # Degraded mode: shrink model axis to the largest power-of-two
+        # divisor that fits; params must be re-laid-out from checkpoint.
+        mp = 1
+        while mp * 2 <= n_devices:
+            mp *= 2
+        return (n_devices // mp, mp)
+    return (n_devices // model_parallel, model_parallel)
+
+
+def reshard_tree(tree, mesh, spec_fn):
+    """device_put every leaf with its spec under the (new) mesh.
+
+    spec_fn: (path_str, leaf) -> PartitionSpec. Works for both fresh
+    placement and rescue-resharding after an elastic restart.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+
+    def key_str(kp):
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+            else:
+                out.append(str(k))
+        return "/".join(out)
+
+    leaves = []
+    for kp, leaf in flat:
+        spec = spec_fn(key_str(kp), leaf)
+        leaves.append(jax.device_put(leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

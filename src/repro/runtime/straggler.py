@@ -1,0 +1,44 @@
+"""Straggler detection and mitigation.
+
+On a synchronous SPMD mesh the slowest host sets the step time. The
+monitor tracks a robust (median + MAD) model of recent step durations and
+flags outliers; mitigation relies on the data pipeline's determinism:
+
+  * **skip-ahead**: a host that fell behind on input synthesis seeks the
+    pipeline forward — it never needs to replay missed batches;
+  * **backup-step** (cluster mode): the supervisor reassigns a flagged
+    host's data shard to a hot spare for the next step — any host can
+    synthesize any shard because batch_at(step, shard) is pure.
+"""
+
+from __future__ import annotations
+
+import collections
+import statistics
+from typing import Deque, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 32, threshold: float = 3.0):
+        self.durations: Deque[float] = collections.deque(maxlen=window)
+        self.threshold = threshold
+        self.flagged_steps = []
+
+    def record(self, step: int, duration_s: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        is_out = False
+        if len(self.durations) >= 8:
+            med = statistics.median(self.durations)
+            mad = statistics.median(
+                [abs(d - med) for d in self.durations]) or 1e-9
+            if (duration_s - med) / (1.4826 * mad) > self.threshold:
+                is_out = True
+                self.flagged_steps.append(step)
+        self.durations.append(duration_s)
+        return is_out
+
+    @property
+    def median(self) -> Optional[float]:
+        if not self.durations:
+            return None
+        return statistics.median(self.durations)

@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — tests
+run on the single real CPU device by design (the 512-device override is
+exclusive to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_geom():
+    from repro.core import standard_geometry
+    return standard_geometry(n=16, n_det=24, n_proj=8)
+
+
+@pytest.fixture(scope="session")
+def small_ct_data(small_geom):
+    import jax.numpy as jnp
+    rng = np.random.RandomState(0)
+    img = jnp.asarray(rng.rand(small_geom.n_proj, small_geom.nh,
+                               small_geom.nw).astype(np.float32))
+    from repro.core import projection_matrices
+    return img, projection_matrices(small_geom)
+
+
+def rel_rmse(a, b):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    scale = max(np.abs(b).max(), 1e-12)
+    return float(np.sqrt(np.mean((a - b) ** 2))) / scale

@@ -1,0 +1,117 @@
+"""Flash attention (custom VJP) vs the reference S^2 oracle."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_ref, decode_attention, decode_attention_window,
+    flash_attention,
+)
+
+
+def _qkv(B=2, Sq=16, Skv=16, H=4, KVH=2, D=8, seed=0, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, Sq, H, D).astype(np.float32), dtype)
+    k = jnp.asarray(rng.randn(B, Skv, KVH, D).astype(np.float32), dtype)
+    v = jnp.asarray(rng.randn(B, Skv, KVH, D).astype(np.float32), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [4, 7, 16, 64])
+def test_flash_matches_ref_causal(chunk):
+    q, k, v = _qkv()
+    out = flash_attention(q, k, v, causal=True, chunk=chunk)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 4, 9])
+def test_flash_matches_ref_window(window):
+    q, k, v = _qkv(seed=1)
+    out = flash_attention(q, k, v, causal=True, window=window, chunk=8)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(Sq=8, Skv=24, seed=2)
+    out = flash_attention(q, k, v, causal=False, chunk=8)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
+
+
+def test_flash_custom_vjp_matches_ref_grads():
+    """The FlashAttention-2 backward must equal autodiff-through-ref."""
+    q, k, v = _qkv(B=1, Sq=8, Skv=8, H=2, KVH=1, D=4, seed=3)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, chunk=4)**2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True)**2)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gf, gr, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, err_msg=f"d{name}")
+
+
+def test_flash_grad_window():
+    q, k, v = _qkv(B=1, Sq=10, Skv=10, H=2, KVH=2, D=4, seed=4)
+
+    def lf(q, k, v):
+        return jnp.sum(
+            flash_attention(q, k, v, causal=True, window=3, chunk=4) ** 2)
+
+    def lr(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True, window=3) ** 2)
+
+    gf = jax.grad(lf, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_decode_attention_matches_prefill_row():
+    """Decoding position p over a cache equals row p of full attention."""
+    B, S, H, KVH, D = 2, 12, 4, 2, 8
+    q, k, v = _qkv(B=B, Sq=S, Skv=S, H=H, KVH=KVH, D=D, seed=5)
+    full = attention_ref(q, k, v, causal=True)
+    p = 7
+    out = decode_attention(q[:, p:p + 1], k, v, jnp.int32(p))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, p]), atol=2e-5)
+
+
+def test_decode_window_ring_buffer():
+    """Ring-buffer decode equals windowed attention at the same position."""
+    B, S, H, KVH, D, W = 1, 20, 2, 1, 4, 8
+    q, k, v = _qkv(B=B, Sq=S, Skv=S, H=H, KVH=KVH, D=D, seed=6)
+    pos = 13
+    full = attention_ref(q, k, v, causal=True, window=W)
+    k_ring = jnp.zeros((B, W, KVH, D))
+    v_ring = jnp.zeros((B, W, KVH, D))
+    for p in range(pos + 1):
+        k_ring = k_ring.at[:, p % W].set(k[:, p])
+        v_ring = v_ring.at[:, p % W].set(v[:, p])
+    out = decode_attention_window(q[:, pos:pos + 1], k_ring, v_ring,
+                                  jnp.int32(pos), W)
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, pos]), atol=2e-5)
+
+
+def test_flash_bf16_accumulates_fp32():
+    q, k, v = _qkv(dtype=jnp.bfloat16, seed=7)
+    out = flash_attention(q, k, v, causal=True, chunk=8)
+    assert out.dtype == jnp.bfloat16
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=3e-2)

@@ -1,0 +1,87 @@
+"""Geometry invariants the paper's optimizations depend on."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import projection_matrix, standard_geometry
+from repro.core.geometry import detector_frame, source_positions
+
+
+@pytest.fixture(scope="module")
+def geom():
+    return standard_geometry(n=32, n_det=48, n_proj=16)
+
+
+def test_k_invariance_of_x_and_z(geom):
+    """O2 hoisting exactness: rows 0 and 2 have zero k coefficient."""
+    for theta in np.linspace(0, 2 * math.pi, 7):
+        m = projection_matrix(geom, float(theta))
+        assert m[0, 2] == 0.0
+        assert m[2, 2] == 0.0
+
+
+def test_center_voxel_projects_to_detector_center(geom):
+    c = np.array([(geom.nx - 1) / 2, (geom.ny - 1) / 2,
+                  (geom.nz - 1) / 2, 1.0])
+    for theta in np.linspace(0, 2 * math.pi, 5):
+        m = projection_matrix(geom, float(theta)).astype(np.float64)
+        z = m[2] @ c
+        assert z == pytest.approx(geom.sad, rel=1e-5)
+        assert (m[0] @ c) / z == pytest.approx((geom.nw - 1) / 2, abs=1e-3)
+        assert (m[1] @ c) / z == pytest.approx((geom.nh - 1) / 2, abs=1e-3)
+
+
+def test_geometric_symmetry_exact(geom):
+    """O3: voxels mirrored about the central XY plane project to
+    y' = (nh-1) - y, exactly (paper §3.1.2, Zhao et al.)."""
+    rng = np.random.RandomState(3)
+    m = projection_matrix(geom, 1.234).astype(np.float64)
+    for _ in range(50):
+        i = rng.randint(0, geom.nx)
+        j = rng.randint(0, geom.ny)
+        k = rng.randint(0, geom.nz)
+        k_m = geom.nz - 1 - k
+        v1 = np.array([i, j, k, 1.0])
+        v2 = np.array([i, j, k_m, 1.0])
+        z1, z2 = m[2] @ v1, m[2] @ v2
+        assert z1 == pytest.approx(z2)          # depth is k-invariant
+        y1 = (m[1] @ v1) / z1
+        y2 = (m[1] @ v2) / z2
+        # exact in exact arithmetic; float32 matrix entries leave ~1e-6
+        # of round-off (far below the half-pixel that would matter)
+        assert y2 == pytest.approx((geom.nh - 1) - y1, abs=1e-4)
+        x1 = (m[0] @ v1) / z1
+        x2 = (m[0] @ v2) / z2
+        assert x1 == pytest.approx(x2, abs=1e-9)  # x is k-invariant
+
+
+def test_detector_frame_consistent_with_matrix(geom):
+    """World-space detector frame and index-space matrix must agree:
+    a world point on the detector at pixel (u,v) projects back to (u,v)."""
+    theta = 0.77
+    origin, ustep, vstep = detector_frame(geom, theta)
+    m = projection_matrix(geom, theta).astype(np.float64)
+    src = source_positions(geom)[0]  # theta=0 entry not used; recompute
+    src = np.array([geom.sad * math.cos(theta),
+                    geom.sad * math.sin(theta), 0.0])
+    sx, sy, sz = geom.voxel_size
+    for (u_pix, v_pix) in [(0, 0), (10, 20), (47, 13)]:
+        p_world = origin + u_pix * ustep + v_pix * vstep
+        # convert the world point to fractional voxel index space
+        idx = np.array([
+            p_world[0] / sx + (geom.nx - 1) / 2,
+            p_world[1] / sy + (geom.ny - 1) / 2,
+            p_world[2] / sz + (geom.nz - 1) / 2,
+            1.0,
+        ])
+        z = m[2] @ idx
+        x = (m[0] @ idx) / z
+        y = (m[1] @ idx) / z
+        assert x == pytest.approx(u_pix, abs=5e-2)
+        assert y == pytest.approx(v_pix, abs=5e-2)
+
+
+def test_magnification(geom):
+    assert geom.magnification == pytest.approx(geom.sdd / geom.sad)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (required by the pool assignment).
+
+For every assigned architecture: instantiate the REDUCED config, run one
+forward and one train step (loss + grads) on CPU, assert output shapes
+and absence of NaNs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get_config, get_smoke_config, \
+    list_archs
+from repro.models import build_model
+
+SHAPE = ShapeConfig("smoke", "train", 16, 2)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(0)
+    batch = model.dummy_batch(SHAPE)
+
+    logits, aux = model.forward(params, batch)
+    assert logits.shape[0] == SHAPE.global_batch
+    assert logits.shape[-1] == cfg.vocab_size
+    assert not bool(jnp.isnan(logits).any())
+
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    # loss ~ ln(vocab) at init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < \
+        2.0 * np.log(cfg.vocab_size)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "deepseek-v2-lite-16b",
+                                  "recurrentgemma-9b", "rwkv6-3b",
+                                  "seamless-m4t-medium"])
+def test_prefill_decode_matches_teacher_forcing(arch):
+    """Serving path correctness: token-by-token decode reproduces the
+    teacher-forced logits (MLA absorption, ring buffers, recurrent
+    states and cross-attention caches all exercised)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(0)
+    shape = ShapeConfig("smoke", "train", 12, 2)
+    batch = model.dummy_batch(shape)
+    logits_full, _ = model.forward(params, batch)
+    off = cfg.frontend_tokens if cfg.family == "vlm" else 0
+
+    s_pre = 8
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :s_pre]
+    logits_pre, cache, pos = model.prefill(params, pre, 16)
+    err = float(jnp.max(jnp.abs(
+        logits_full[:, off + s_pre - 1] - logits_pre[:, -1])))
+    assert err < 5e-5, f"prefill mismatch {err}"
+
+    for t in range(s_pre, 12):
+        tok = batch["tokens"][:, t:t + 1]
+        logits_t, cache = model.decode_step(params, cache, tok,
+                                            jnp.int32(off + t))
+        err = float(jnp.max(jnp.abs(logits_full[:, off + t]
+                                    - logits_t[:, -1])))
+        assert err < 5e-5, f"decode mismatch at {t}: {err}"
+
+
+def test_full_configs_match_pool_dims():
+    """The FULL configs carry the exact dims assigned in the pool."""
+    expect = {
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+    }
+    for arch, (L, d, H, KVH, ff, V) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == H, arch
+        assert cfg.n_kv_heads == KVH, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == V, arch
+
+
+def test_moe_configs():
+    g = get_config("granite-moe-1b-a400m")
+    assert g.moe.num_experts == 32 and g.moe.top_k == 8
+    d = get_config("deepseek-v2-lite-16b")
+    assert d.moe.num_experts == 64 and d.moe.top_k == 6
+    assert d.moe.num_shared == 2
+    assert d.mla.kv_lora_rank == 512
+
+
+def test_param_counts_in_expected_range():
+    """Analytic parameter counts should be near the advertised sizes."""
+    cases = {
+        "qwen1.5-110b": (90e9, 130e9),
+        "deepseek-67b": (55e9, 75e9),
+        "qwen2.5-3b": (2.2e9, 4.2e9),
+        "granite-moe-1b-a400m": (0.8e9, 1.8e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        "rwkv6-3b": (2.2e9, 4.5e9),
+        # pool dims give 6.7B (the pool entry is [unverified]; the real
+        # model's 9B includes a larger ff factor) — bound on POOL dims
+        "recurrentgemma-9b": (6e9, 11e9),
+    }
+    for arch, (lo, hi) in cases.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_active_params_less_than_total_for_moe():
+    for arch in ("granite-moe-1b-a400m", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+    cfg = get_config("qwen2.5-3b")
+    assert cfg.active_param_count() == cfg.param_count()

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import standard_geometry, projection_matrices, \
+    transpose_projections
+from repro.core.backproject import bp_subline
+from repro.core.baseline import bilinear_gather
+from repro.models.layers import chunked_cross_entropy, cross_entropy, \
+    unembed
+
+_GEOM = standard_geometry(n=8, n_det=12, n_proj=4)
+_MATS = projection_matrices(_GEOM)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-4.0, 4.0), st.floats(-4.0, 4.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_backprojection_is_linear(alpha, beta, seed):
+    """BP(a*X + b*Y) == a*BP(X) + b*BP(Y) — the operator is linear, which
+    underlies both FDK filtering correctness and gradient-through-BP."""
+    rng = np.random.RandomState(seed % 2**31)
+    X = jnp.asarray(rng.rand(4, 12, 12).astype(np.float32))
+    Y = jnp.asarray(rng.rand(4, 12, 12).astype(np.float32))
+    xt, yt = transpose_projections(X), transpose_projections(Y)
+    shape = _GEOM.volume_shape_xyz
+    lhs = bp_subline(alpha * xt + beta * yt, _MATS, shape)
+    rhs = alpha * bp_subline(xt, _MATS, shape) + \
+        beta * bp_subline(yt, _MATS, shape)
+    scale = max(float(jnp.abs(rhs).max()), 1e-9)
+    assert float(jnp.abs(lhs - rhs).max()) / scale < 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 10.9), st.floats(0.0, 10.9),
+       st.integers(0, 2 ** 31 - 1))
+def test_bilinear_interpolation_within_hull(x, y, seed):
+    """Interpolated values never leave [min, max] of the image —
+    interpolation is a convex combination."""
+    rng = np.random.RandomState(seed % 2**31)
+    img = jnp.asarray(rng.rand(12, 12).astype(np.float32))
+    val, valid = bilinear_gather(img, jnp.float32(x), jnp.float32(y))
+    if bool(valid):
+        assert float(img.min()) - 1e-6 <= float(val) <= \
+            float(img.max()) + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+def test_chunked_ce_equals_full_ce(seed, chunk):
+    """The memory-efficient loss is a pure refactor of the plain one."""
+    rng = np.random.RandomState(seed % 2**31)
+    B, S, d, V = 2, 6, 8, 16
+    h = jnp.asarray(rng.randn(B, S, d).astype(np.float32))
+    w = jnp.asarray(rng.randn(d, V).astype(np.float32) * 0.2)
+    labels = jnp.asarray(rng.randint(0, V, (B, S)), jnp.int32)
+    full = cross_entropy(unembed(w, h, tied=False), labels)
+    chunked = chunked_cross_entropy(h, w, labels, tied=False, chunk=chunk)
+    assert float(jnp.abs(full - chunked)) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_chunked_ce_ignores_masked_labels(seed):
+    rng = np.random.RandomState(seed % 2**31)
+    B, S, d, V = 1, 8, 4, 12
+    h = jnp.asarray(rng.randn(B, S, d).astype(np.float32))
+    w = jnp.asarray(rng.randn(d, V).astype(np.float32))
+    labels = np.asarray(rng.randint(0, V, (B, S)), np.int32)
+    labels[:, 5:] = -1
+    a = chunked_cross_entropy(h, w, jnp.asarray(labels), tied=False,
+                              chunk=4)
+    # only the first 5 positions should matter
+    h2 = h.at[:, 5:].set(123.0)
+    b = chunked_cross_entropy(h2, w, jnp.asarray(labels), tied=False,
+                              chunk=4)
+    assert float(jnp.abs(a - b)) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6),
+       st.integers(1, 12))
+def test_pipeline_batches_always_in_vocab(seed, step, vocab_bits):
+    from repro.data import TokenPipeline
+    vocab = 2 ** vocab_bits + 3
+    p = TokenPipeline(vocab_size=vocab, seq_len=5, global_batch=2,
+                      seed=seed % 1000)
+    b = p.batch_at(step)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < vocab
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_flash_attention_rows_are_convex_combinations(seed):
+    """Attention output lies in the convex hull of the value vectors
+    (per head) — holds for any mask as long as one key is visible."""
+    from repro.models.attention import flash_attention
+    rng = np.random.RandomState(seed % 2**31)
+    B, S, H, D = 1, 6, 2, 4
+    q = jnp.asarray(rng.randn(B, S, H, D).astype(np.float32))
+    k = jnp.asarray(rng.randn(B, S, H, D).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, S, H, D).astype(np.float32))
+    out = flash_attention(q, k, v, causal=True, chunk=3)
+    vmin = np.asarray(v).min(axis=1)    # (B, H, D)
+    vmax = np.asarray(v).max(axis=1)
+    o = np.asarray(out)
+    for s in range(S):
+        assert np.all(o[:, s] >= vmin - 1e-4)
+        assert np.all(o[:, s] <= vmax + 1e-4)

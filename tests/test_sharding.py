@@ -1,0 +1,138 @@
+"""Sharding rule unit tests (pure — no multi-device mesh needed)."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh
+
+
+class _FakeMesh:
+    """Duck-typed mesh: axis names + shape only (rules are pure)."""
+
+    def __init__(self, shape_by_name):
+        self.axis_names = tuple(shape_by_name)
+        self.devices = np.empty(tuple(shape_by_name.values()))
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH_POD = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_attention_weight_specs():
+    s = shd.spec_for_param("layers/attn/wq", (80, 8192, 8192), MESH)
+    assert s == P(None, "data", "model")
+    s = shd.spec_for_param("layers/attn/wo", (80, 8192, 8192), MESH)
+    assert s == P(None, "model", "data")
+
+
+def test_mlp_weight_specs():
+    s = shd.spec_for_param("layers/mlp/wi_gate", (80, 8192, 49152), MESH)
+    assert s == P(None, "data", "model")
+    s = shd.spec_for_param("layers/mlp/wo", (80, 49152, 8192), MESH)
+    assert s == P(None, "model", "data")
+
+
+def test_embed_specs_with_divisibility_fallback():
+    # 152064 divisible by 16 -> vocab sharded
+    assert shd.spec_for_param("embed", (152064, 8192), MESH) == \
+        P("model", "data")
+    # 49155 NOT divisible by 16 -> vocab replicated, d still sharded
+    assert shd.spec_for_param("embed", (49155, 1024), MESH) == \
+        P(None, "data")
+
+
+def test_moe_expert_parallel_specs():
+    s = shd.spec_for_param("layers/moe/wi_gate", (24, 32, 1024, 512), MESH)
+    assert s == P(None, "model", "data", None)
+    s = shd.spec_for_param("layers/moe/wo", (24, 32, 512, 1024), MESH)
+    assert s == P(None, "model", None, "data")
+
+
+def test_norms_replicated():
+    assert shd.spec_for_param("layers/ln_attn/scale", (24, 8192), MESH) \
+        == P(None, None)
+    assert shd.spec_for_param("ln_f/scale", (8192,), MESH) == P(None)
+
+
+def test_pod_axis_never_in_weight_specs():
+    """Weights replicate across pods (DCN-friendly): no 'pod' in specs."""
+    for path, shape in [("layers/attn/wq", (80, 8192, 8192)),
+                        ("embed", (152064, 8192)),
+                        ("layers/moe/wi_gate", (24, 32, 1024, 512))]:
+        s = shd.spec_for_param(path, shape, MESH_POD)
+        assert "pod" not in jax.tree_util.tree_leaves(tuple(s)), (path, s)
+
+
+def test_batch_axes_divisibility():
+    assert shd._batch_axes(MESH, 256) == "data"
+    assert shd._batch_axes(MESH_POD, 256) == ("pod", "data")
+    assert shd._batch_axes(MESH_POD, 2) == "pod"
+    assert shd._batch_axes(MESH_POD, 1) is None
+
+
+def test_cache_specs_prefer_time_axis():
+    import jax.numpy as jnp
+    cache = {"k": jax.ShapeDtypeStruct((32, 128, 32768, 8, 128),
+                                       jnp.bfloat16)}
+    specs = shd.cache_specs(cache, MESH, None)
+    assert specs["k"] == P(None, "data", "model", None, None)
+
+
+def test_rwkv_state_spec_falls_back():
+    import jax.numpy as jnp
+    # default "heads" strategy: dim 3 (64) divides the model axis
+    cache = {"S": jax.ShapeDtypeStruct((32, 128, 40, 64, 64),
+                                       jnp.float32)}
+    specs = shd.cache_specs(cache, MESH, None)
+    assert specs["S"] == P(None, "data", None, "model", None)
+    # "seq" strategy: H=40 not divisible, falls to the last divisible dim
+    specs = shd.cache_specs(cache, MESH, None, strategy="feature")
+    assert specs["S"] == P(None, "data", None, None, "model")
+
+
+def test_cache_specs_heads_strategy_prefers_kv_heads():
+    import jax.numpy as jnp
+    # kv=32 divides model=16 -> heads axis sharded (stablelm decode D3)
+    cache = {"k": jax.ShapeDtypeStruct((32, 128, 32768, 32, 80),
+                                       jnp.bfloat16)}
+    specs = shd.cache_specs(cache, MESH, None)
+    assert specs["k"] == P(None, "data", None, "model", None)
+
+
+def test_attn_fsdp_toggle():
+    s = shd.spec_for_param("layers/attn/wq", (80, 8192, 8192), MESH,
+                           attn_fsdp=False)
+    assert s == P(None, None, "model")
+    s = shd.spec_for_param("layers/attn/wk", (80, 8192, 1024), MESH,
+                           attn_fsdp=False)
+    assert s == P(None, "data", "model")   # wk/wv stay FSDP
+
+
+def test_zero1_optimizer_specs():
+    import jax.numpy as jnp
+    params = {"w": jax.ShapeDtypeStruct((8192, 512), jnp.bfloat16)}
+    pspecs = {"w": P(None, "model")}
+    ospecs = shd.optimizer_specs(pspecs, params, MESH, zero1=True)
+    assert ospecs.m["w"] == P("data", "model")
+
+
+def test_param_specs_cover_every_leaf():
+    """Every leaf of every smoke model gets a valid spec (no crashes,
+    correct rank)."""
+    from repro.configs import get_smoke_config, list_archs
+    from repro.models import build_model
+    for arch in list_archs():
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        aparams = jax.eval_shape(lambda m=model: m.init(0))
+        specs = shd.param_specs(aparams, MESH)
+        flat_p = jax.tree_util.tree_leaves(aparams)
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for leaf, spec in zip(flat_p, flat_s):
+            assert len(spec) == len(leaf.shape), (arch, spec, leaf.shape)

@@ -1,0 +1,297 @@
+"""Data pipeline, optimizer, checkpoint, runtime substrate tests."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.data import TokenPipeline
+from repro.optim import (
+    accumulate_gradients, adamw_init, adamw_update, clip_by_global_norm,
+    compress_int8, cosine_warmup, decompress_int8,
+)
+from repro.runtime import FaultTolerantLoop, StragglerMonitor, remesh_plan
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_seekable():
+    p1 = TokenPipeline(vocab_size=100, seq_len=8, global_batch=4, seed=7)
+    a = p1.batch_at(5)
+    p2 = TokenPipeline(vocab_size=100, seq_len=8, global_batch=4, seed=7)
+    p2.seek(5)
+    b = next(p2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    p = TokenPipeline(vocab_size=100, seq_len=8, global_batch=2, seed=0)
+    b = p.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_sharding_partitions_global_batch():
+    """Concatenating shards reproduces the single-host global batch —
+    the property elastic restarts rely on."""
+    full = TokenPipeline(vocab_size=100, seq_len=4, global_batch=8,
+                         seed=3).batch_at(2)
+    parts = [TokenPipeline(vocab_size=100, seq_len=4, global_batch=8,
+                           shard_index=i, num_shards=4,
+                           seed=3).batch_at(2)["tokens"]
+             for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full["tokens"])
+
+
+def test_pipeline_prefetch_matches_sync():
+    p = TokenPipeline(vocab_size=50, seq_len=4, global_batch=2, seed=1)
+    sync = [p.batch_at(i)["tokens"] for i in range(3)]
+    p2 = TokenPipeline(vocab_size=50, seq_len=4, global_batch=2, seed=1)
+    p2.start_prefetch()
+    try:
+        got = [next(p2)["tokens"] for _ in range(3)]
+    finally:
+        p2.stop_prefetch()
+    for a, b in zip(sync, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pipeline_seed_changes_stream():
+    a = TokenPipeline(vocab_size=100, seq_len=8, global_batch=2,
+                      seed=0).batch_at(0)["tokens"]
+    b = TokenPipeline(vocab_size=100, seq_len=8, global_batch=2,
+                      seed=1).batch_at(0)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_matches_manual_formula():
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]])}
+    st = adamw_init(p)
+    lr, wd, b1, b2, eps = 0.1, 0.01, 0.9, 0.95, 1e-8
+    newp, st2 = adamw_update(p, g, st, lr=lr, b1=b1, b2=b2, eps=eps,
+                             weight_decay=wd)
+    m = (1 - b1) * np.asarray(g["w"])
+    v = (1 - b2) * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    expect = np.asarray(p["w"]) - lr * (
+        mhat / (np.sqrt(vhat) + eps) + wd * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), expect, atol=1e-6)
+    assert int(st2.step) == 1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}          # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               atol=1e-6)
+    # below threshold: unchanged
+    clipped2, _ = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), [3.0, 4.0])
+
+
+def test_cosine_warmup_schedule():
+    lr0 = float(cosine_warmup(0, base_lr=1.0, warmup_steps=10,
+                              total_steps=100))
+    lr_w = float(cosine_warmup(10, base_lr=1.0, warmup_steps=10,
+                               total_steps=100))
+    lr_end = float(cosine_warmup(100, base_lr=1.0, warmup_steps=10,
+                                 total_steps=100))
+    assert lr0 == 0.0
+    assert lr_w == pytest.approx(1.0)
+    assert lr_end == pytest.approx(0.1, abs=1e-6)
+
+
+def test_accumulate_gradients_equals_full_batch():
+    """Mean-of-microbatch grads == grad of mean loss (O5 correctness)."""
+    w = {"w": jnp.asarray(np.random.RandomState(0).randn(4, 3),
+                          jnp.float32)}
+
+    def loss(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] - batch["y"]) ** 2)
+
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(8, 4), jnp.float32)
+    y = jnp.asarray(rng.randn(8, 3), jnp.float32)
+    full_loss, full_g = jax.value_and_grad(loss)(w, {"x": x, "y": y})
+    micro = {"x": x.reshape(4, 2, 4), "y": y.reshape(4, 2, 3)}
+    acc_loss, acc_g = accumulate_gradients(loss, w, micro)
+    assert float(acc_loss) == pytest.approx(float(full_loss), rel=1e-5)
+    np.testing.assert_allclose(np.asarray(acc_g["w"]),
+                               np.asarray(full_g["w"]), atol=1e-5)
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.RandomState(2)
+    g = jnp.asarray(rng.randn(64) * 0.01, jnp.float32)
+    q, scale, resid = compress_int8(g)
+    deq = decompress_int8(q, scale)
+    # reconstruction + residual == original (exact bookkeeping)
+    np.testing.assert_allclose(np.asarray(deq) + np.asarray(resid),
+                               np.asarray(g), atol=1e-7)
+    # feeding the residual back reduces accumulated bias
+    q2, s2, r2 = compress_int8(g, resid)
+    total = np.asarray(decompress_int8(q, scale)) + \
+        np.asarray(decompress_int8(q2, s2))
+    np.testing.assert_allclose(total, 2 * np.asarray(g),
+                               atol=2 * float(scale))
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.zeros((3,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(3, t, blocking=True)
+    step, restored = ck.restore_latest(t)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert restored["params"]["b"].dtype == np.asarray(
+        t["params"]["b"]).dtype
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_keeps_latest_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(), blocking=True)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), blocking=True)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp-123"))
+    assert ck.latest_step() == 5
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(2, t, blocking=True)
+    # corrupt one leaf file
+    d = os.path.join(str(tmp_path), "step_00000002")
+    victim = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(d, victim))
+    arr = np.asarray(arr).copy()
+    flat = arr.reshape(-1).view(np.uint8)
+    if flat.size:
+        flat[0] ^= 0xFF
+    np.save(os.path.join(d, victim), arr)
+    with pytest.raises(IOError):
+        ck.restore(2, t)
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.zeros((2, 2))}, blocking=True)
+    with pytest.raises(ValueError):
+        ck.restore(1, {"w": jnp.zeros((3, 3))})
+
+
+# --------------------------------------------------------------------------
+# fault tolerance / straggler / elastic
+# --------------------------------------------------------------------------
+
+def test_ft_loop_recovers_from_transient_failure(tmp_path):
+    pipeline = TokenPipeline(vocab_size=50, seq_len=4, global_batch=2,
+                             seed=0)
+    ck = Checkpointer(str(tmp_path))
+    loop = FaultTolerantLoop(checkpointer=ck, pipeline=pipeline,
+                             save_every=2, max_retries_per_step=3)
+    state = {"w": jnp.zeros(()), "n": jnp.int32(0)}
+    fail_once = {"armed": True}
+
+    def step_fn(state, batch):
+        if fail_once["armed"] and int(state["n"]) == 3:
+            fail_once["armed"] = False
+            raise RuntimeError("injected device failure")
+        return ({"w": state["w"] + 1.0, "n": state["n"] + 1},
+                {"loss": 1.0})
+
+    end, final = loop.run(state, step_fn, start_step=0, num_steps=6)
+    assert loop.recoveries == 1
+    assert int(final["n"]) == 6 or int(final["n"]) >= 5
+
+
+def test_ft_loop_skips_poison_step(tmp_path):
+    pipeline = TokenPipeline(vocab_size=50, seq_len=4, global_batch=2,
+                             seed=0)
+    ck = Checkpointer(str(tmp_path))
+    loop = FaultTolerantLoop(checkpointer=ck, pipeline=pipeline,
+                             save_every=100, max_retries_per_step=1)
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if pipeline_step_is_poison(batch):
+            raise RuntimeError("poison batch")
+        return state, {"loss": 0.5}
+
+    def pipeline_step_is_poison(batch):
+        # poison exactly step 1's batch signature
+        return int(batch["tokens"][0, 0]) == int(
+            pipeline.batch_at(1)["tokens"][0, 0]) and \
+            np.array_equal(batch["tokens"], pipeline.batch_at(1)["tokens"])
+
+    end, _ = loop.run({"x": jnp.zeros(())}, step_fn, start_step=0,
+                      num_steps=4)
+    assert end >= 4
+    assert loop.failures >= 1
+
+
+def test_ft_nan_guard(tmp_path):
+    pipeline = TokenPipeline(vocab_size=50, seq_len=4, global_batch=2,
+                             seed=0)
+    ck = Checkpointer(str(tmp_path))
+    loop = FaultTolerantLoop(checkpointer=ck, pipeline=pipeline,
+                             save_every=100, max_retries_per_step=0)
+
+    def step_fn(state, batch):
+        return state, {"loss": float("nan")}
+
+    end, _ = loop.run({"x": jnp.zeros(())}, step_fn, start_step=0,
+                      num_steps=2)
+    assert loop.failures >= 1   # NaN treated as a fault and skipped
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(window=16, threshold=3.0)
+    for i in range(12):
+        assert not mon.record(i, 1.0 + 0.01 * (i % 3))
+    assert mon.record(12, 10.0)          # 10x median -> straggler
+    assert 12 in mon.flagged_steps
+
+
+def test_remesh_plan_elastic():
+    assert remesh_plan(256, model_parallel=16) == (16, 16)
+    assert remesh_plan(240, model_parallel=16) == (15, 16)  # lost a host
+    assert remesh_plan(8, model_parallel=16) == (1, 8)      # degraded
