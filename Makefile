@@ -1,0 +1,17 @@
+# Convenience targets; tier1 is the CI gate (ROADMAP.md).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: tier1 tier1-slow collect-smoke bench-tiled
+
+tier1:
+	tests/run_tier1.sh
+
+tier1-slow:                    # opt-in heavyweight Pallas sweeps
+	$(PY) -m pytest -q -m slow
+
+collect-smoke:                 # collection must never silently fail
+	$(PY) -m pytest -q --co -m "" >/dev/null
+
+bench-tiled:
+	$(PY) -m benchmarks.bench_tiled

@@ -7,6 +7,7 @@
 #   Fig. 10 -> bench_roofline     (AI placement, analytic + dry-run)
 #   Fig. 11 -> bench_crossplatform(bandwidth-model comparison)
 #   Table 3 -> bench_problems     (P1.. problem matrix, CPU-scaled)
+#   (ours)  -> bench_tiled        (tiled engine tile-shape sweep)
 #   (ours)  -> bench_lm_substrate (assigned-arch substrate latencies)
 
 from __future__ import annotations
@@ -23,6 +24,7 @@ def main() -> None:
         bench_problems,
         bench_roofline,
         bench_scaling,
+        bench_tiled,
         bench_variants,
     )
 
@@ -33,6 +35,7 @@ def main() -> None:
         ("scaling(Fig9)", bench_scaling.main),
         ("roofline(Fig10)", bench_roofline.main),
         ("crossplatform(Fig11)", bench_crossplatform.main),
+        ("tiled(engine)", bench_tiled.main),
         ("lm_substrate", bench_lm_substrate.main),
     ]
     failed = 0

@@ -1,0 +1,73 @@
+"""Out-of-core reconstruction with the tiled streaming engine.
+
+Reconstructs the same phantom as quickstart.py, but through
+`runtime.engine.TiledReconstructor`: the volume is decomposed into
+(i, j)-tiles x Z-slabs and each sub-box is back-projected with
+translated projection matrices, so the device working set is O(tile)
+instead of O(volume) — volumes larger than device memory stream through
+unchanged kernels (paper §3.1 locality, iFDK-style slab scale-out).
+
+    PYTHONPATH=src python examples/tiled_recon.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import fdk_reconstruct, shepp_logan_3d, standard_geometry
+from repro.core.forward import forward_project
+from repro.runtime.engine import TiledReconstructor
+
+
+def main():
+    geom = standard_geometry(n=32, n_det=48, n_proj=60)
+    phantom = jnp.asarray(shepp_logan_3d(geom.nx))
+    projections = forward_project(phantom, geom, oversample=2.0)
+
+    # untiled reference (one full-volume variant call)
+    ref = fdk_reconstruct(projections, geom, variant="algorithm1_mp",
+                          nb=12)
+    scale = float(jnp.abs(ref).max())
+
+    # 1. explicit tile shape — 11x13x9 does NOT divide 32^3: edge tiles
+    #    shrink and Z-slabs run as mirror pairs + a centered middle slab.
+    eng = TiledReconstructor(geom, "algorithm1_mp",
+                             tile_shape=(11, 13, 9), nb=12)
+    ij, z_units = eng.plan()
+    print(f"tile plan: {len(ij)} (i,j)-tiles x {len(z_units)} Z-units, "
+          f"working set {eng.working_set_bytes / 2**20:.1f} MiB/tile")
+    tiled = eng.reconstruct(projections)
+    rmse = float(jnp.sqrt(jnp.mean((tiled - ref) ** 2))) / scale
+    print(f"tiled-vs-untiled relative RMSE: {rmse:.2e} "
+          f"({'OK' if rmse < 1e-5 else 'FAIL'})")
+
+    # 2. auto-picked tiles from a byte budget (quarter of the untiled
+    #    working set) — how a larger-than-memory volume would be run.
+    budget = eng.working_set_bytes  # any cap works; reuse the tile's
+    auto = TiledReconstructor(geom, "algorithm1_mp", memory_budget=budget,
+                              nb=12)
+    print(f"auto-picked tile for {budget / 2**20:.1f} MiB budget: "
+          f"{auto.tile_shape}")
+    tiled2 = auto.reconstruct(projections)
+    rmse2 = float(jnp.sqrt(jnp.mean((tiled2 - ref) ** 2))) / scale
+    print(f"budget-tiled relative RMSE: {rmse2:.2e} "
+          f"({'OK' if rmse2 < 1e-5 else 'FAIL'})")
+
+    # 3. the same path through the pipeline entry point
+    tiled3 = fdk_reconstruct(projections, geom, variant="algorithm1_mp",
+                             nb=12, tiling=(16, 16, 32))
+    rmse3 = float(jnp.sqrt(jnp.mean((tiled3 - ref) ** 2))) / scale
+    print(f"fdk_reconstruct(tiling=...) relative RMSE: {rmse3:.2e} "
+          f"({'OK' if rmse3 < 1e-5 else 'FAIL'})")
+
+    # interior quality vs ground truth (cone-beam artifacts excluded)
+    n = geom.nx
+    sl = slice(n // 4, 3 * n // 4)
+    ph = np.asarray(phantom)[sl, sl, sl]
+    rc = np.asarray(tiled)[sl, sl, sl]
+    corr = np.corrcoef(ph.ravel(), rc.ravel())[0, 1]
+    print(f"interior corr vs phantom: {corr:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ from .baseline import backproject_rtk, bilinear_gather  # noqa: F401
 from .backproject import (  # noqa: F401
     bp_share,
     bp_subline,
+    bp_subline_batch,
     bp_subline_symmetry_batch,
     bp_symmetry,
     bp_transpose,
@@ -17,6 +18,15 @@ from .backproject import (  # noqa: F401
     volume_to_native,
     volume_to_transposed,
 )
-from .variants import VARIANTS, get_variant  # noqa: F401
+from .tiling import (  # noqa: F401
+    TileSpec,
+    make_tiles,
+    pad_projection_batch,
+    pick_tile_shape,
+    plan_z_slabs,
+    plan_z_units,
+    translate_matrices,
+)
+from .variants import VARIANTS, get_variant, slab_safe_variant  # noqa: F401
 from .fdk import fdk_reconstruct  # noqa: F401
 from .phantom import ball_phantom, shepp_logan_3d  # noqa: F401

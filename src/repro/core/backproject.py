@@ -218,19 +218,59 @@ def bp_subline(img_t, mat, vol_shape_xyz):
     return jax.lax.fori_loop(0, img_t.shape[0], body, vol0)
 
 
+def _nb_batched_scan(single_fn, img_t, mat, vol_shape_xyz, nb):
+    """Shared O5 scaffold: scan over nb-batches of projections, vmap the
+    in-batch contributions (partial sums stay in registers/VMEM), update
+    the volume ONCE per batch — the 1/nb write-traffic reduction of
+    §3.1.3. np must be divisible by nb (pad upstream via
+    tiling.pad_projection_batch)."""
+    n_proj = img_t.shape[0]
+    assert n_proj % nb == 0, f"np={n_proj} not divisible by nb={nb}"
+    img_b = img_t.reshape(n_proj // nb, nb, *img_t.shape[1:])
+    mat_b = mat.reshape(n_proj // nb, nb, 3, 4)
+
+    def body(vol, xs):
+        img_bt, mat_bt = xs
+        per = jax.vmap(single_fn)(img_bt, mat_bt)
+        return vol + per.sum(axis=0), None
+
+    vol0 = jnp.zeros(vol_shape_xyz, jnp.float32)
+    vol, _ = jax.lax.scan(body, vol0, (img_b, mat_b))
+    return vol
+
+
+@functools.partial(jax.jit, static_argnames=("vol_shape_xyz", "nb"))
+def bp_subline_batch(img_t, mat, vol_shape_xyz, nb: int = 8):
+    """O1+O2+O4+O5: nb-batched subline WITHOUT the O3 mirror.
+
+    The symmetry-free member of the batched family: exact on ANY
+    translated sub-box of the volume (the O3 pairing k <-> nk-1-k is
+    only meaningful when the box is centered on the volume's Z midplane),
+    so the tiled engine uses it as the slab-safe fallback for arbitrary
+    Z-slabs.
+    """
+    return _nb_batched_scan(
+        lambda im, mm: _bp_subline_single(im, mm, vol_shape_xyz),
+        img_t, mat, vol_shape_xyz, nb)
+
+
 # --------------------------------------------------------------------------
 # O1+O2+O3(+O4): symmetry — y-dot for k < nz/2 only, mirror the rest
 # --------------------------------------------------------------------------
 
 def _bp_symmetry_single(img_ts, mat_s, vol_shape_xyz, *, use_subline: bool):
     ni, nj, nk = vol_shape_xyz
-    assert nk % 2 == 0, "symmetry variant requires even nz"
+    # Uneven half-split (matches the Pallas kernels): k in [0, khp)
+    # computed directly — including the self-mirrored middle plane when
+    # nk is odd — and k in [khp, nk) filled from the O3 mirror.
+    kh = nk // 2           # mirrored half
+    khp = nk - kh          # direct half (== kh, or kh+1 when nk odd)
     nw, nh = img_ts.shape
     f, w, x, z = hoisted_fwx(mat_s, ni, nj)
     a, b = _y_coeffs(mat_s, f, ni, nj)
-    kh = jnp.arange(nk // 2, dtype=jnp.float32)
-    y = a[..., None] + b[..., None] * kh          # (ni, nj, nk/2)
-    y_m = (nh - 1.0) - y                           # mirrored rows (O3)
+    kv = jnp.arange(khp, dtype=jnp.float32)
+    y = a[..., None] + b[..., None] * kv          # (ni, nj, khp)
+    y_m = (nh - 1.0) - y[..., :kh]                 # mirrored rows (O3)
     if use_subline:
         sm, x_valid = _subline_buffer(img_ts, x, nw)
         val, y_valid = _interp_column(sm, y, nh)
@@ -280,31 +320,15 @@ def bp_symmetry(img_t, mat, vol_shape_xyz):
 def bp_subline_symmetry_batch(img_t, mat, vol_shape_xyz, nb: int = 8):
     """Paper Algorithm 1 semantics in pure JAX.
 
-    Projections are processed in batches of ``nb``; within a batch the
-    partial sums accumulate in values (registers/VMEM on TPU), and the
-    volume is updated ONCE per batch — the 1/nb write-traffic reduction of
-    §3.1.3. np must be divisible by nb (pad upstream if needed).
+    Projections are processed in batches of ``nb`` (the shared
+    ``_nb_batched_scan`` scaffold); within a batch the partial sums
+    accumulate in values (registers/VMEM on TPU), and the volume is
+    updated ONCE per batch — the 1/nb write-traffic reduction of §3.1.3.
     """
-    n_proj = img_t.shape[0]
-    assert n_proj % nb == 0, f"np={n_proj} not divisible by nb={nb}"
-    img_b = img_t.reshape(n_proj // nb, nb, *img_t.shape[1:])
-    mat_b = mat.reshape(n_proj // nb, nb, 3, 4)
-
-    def batch_contrib(img_bt, mat_bt):
-        # vmap over the nb in-batch projections, sum in registers.
-        per = jax.vmap(
-            lambda im, mm: _bp_symmetry_single(
-                im, mm, vol_shape_xyz, use_subline=True)
-        )(img_bt, mat_bt)
-        return per.sum(axis=0)
-
-    def body(vol, xs):
-        img_bt, mat_bt = xs
-        return vol + batch_contrib(img_bt, mat_bt), None
-
-    vol0 = jnp.zeros(vol_shape_xyz, jnp.float32)
-    vol, _ = jax.lax.scan(body, vol0, (img_b, mat_b))
-    return vol
+    return _nb_batched_scan(
+        lambda im, mm: _bp_symmetry_single(im, mm, vol_shape_xyz,
+                                           use_subline=True),
+        img_t, mat, vol_shape_xyz, nb)
 
 
 @functools.partial(jax.jit, static_argnames=("vol_shape_xyz",))

@@ -32,17 +32,18 @@ from jax.sharding import PartitionSpec as P
 from .backproject import bp_subline_symmetry_batch, \
     bp_subline_symmetry_scan
 from .geometry import CTGeometry
+from .tiling import translate_matrices  # noqa: F401  (re-export; moved)
 
 
-def translate_matrices(mat: jnp.ndarray, i0, j0) -> jnp.ndarray:
-    """Shift voxel-index origin by (i0, j0): fold into the constant col.
-
-    mat: (..., 3, 4). Projection of (i+i0, j+j0, k, 1) under M equals
-    projection of (i, j, k, 1) under M' where M'[:, 3] += i0*M[:, 0] +
-    j0*M[:, 1].
-    """
-    const = (mat[..., 3] + i0 * mat[..., 0] + j0 * mat[..., 1])
-    return jnp.concatenate([mat[..., :3], const[..., None]], axis=-1)
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """Version-portable shard_map (replication checks off: the psum over
+    "pod" is the only cross-slab collective and is explicit)."""
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm  # jax 0.4.x
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
 
 
 def _pad_up(n: int, k: int) -> int:
@@ -50,12 +51,21 @@ def _pad_up(n: int, k: int) -> int:
 
 
 def make_distributed_bp(geom: CTGeometry, mesh, *, nb: int = 32,
-                        variant: str = "scan", inner_nb: int = 8):
+                        variant: str = "scan", inner_nb: int = 8,
+                        vol_shape_xyz=None):
     """Build (fn, (img_spec, mat_spec, out_spec)) for one projection batch.
 
-    fn(img_t_batch (nb, nw, nh), mat_batch (nb, 3, 4)) -> partial volume
-    (nx_pad, ny_pad, nz) sharded (data, model, None). Call repeatedly over
-    batches and accumulate (the driver owns the += and final unpad).
+    fn(img_t_batch (nb, nw, nh), mat_batch (nb, 3, 4), origin (2,) f32)
+    -> partial volume (nx_pad, ny_pad, nz) sharded (data, model, None).
+    Call repeatedly over batches and accumulate (the driver owns the +=
+    and final unpad).
+
+    ``vol_shape_xyz`` reconstructs a sub-box of the full volume;
+    ``origin`` is the sub-box origin in global voxel indices, passed at
+    CALL time (a traced (2,) array, replicated) so one compiled program
+    serves every tile of the same shape: each device's slab origin is
+    the tile origin plus its mesh offset, letting the tiled engine
+    compose (i, j)-tiles with the data/model/pod mesh unchanged.
     """
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     nd = axis_sizes.get("data", 1)
@@ -63,21 +73,23 @@ def make_distributed_bp(geom: CTGeometry, mesh, *, nb: int = 32,
     npod = axis_sizes.get("pod", 1)
     has_pod = "pod" in mesh.axis_names
 
-    nx_pad = _pad_up(geom.nx, nd)
-    ny_pad = _pad_up(geom.ny, nm)
+    ni, nj, nz = (geom.nx, geom.ny, geom.nz) if vol_shape_xyz is None \
+        else tuple(int(v) for v in vol_shape_xyz)
+    nx_pad = _pad_up(ni, nd)
+    ny_pad = _pad_up(nj, nm)
     bi, bj = nx_pad // nd, ny_pad // nm
-    nz = geom.nz
 
     in_specs = (P("pod" if has_pod else None, None, None),  # img over pod
-                P("pod" if has_pod else None, None, None))  # mats over pod
+                P("pod" if has_pod else None, None, None),  # mats over pod
+                P(None))                                    # origin repl.
     out_spec = P("data", "model", None)
 
-    def shard_fn(img_t_local, mat_local):
-        # slab origin from mesh coordinates
+    def shard_fn(img_t_local, mat_local, origin):
+        # slab origin from mesh coordinates + the (traced) tile origin
         di = jax.lax.axis_index("data")
         dj = jax.lax.axis_index("model")
-        i0 = (di * bi).astype(jnp.float32)
-        j0 = (dj * bj).astype(jnp.float32)
+        i0 = origin[0] + (di * bi).astype(jnp.float32)
+        j0 = origin[1] + (dj * bj).astype(jnp.float32)
         mat_shift = translate_matrices(mat_local, i0, j0)
         if variant == "scan":
             # sequential accumulation: 1x volume-sized temporaries
@@ -92,9 +104,10 @@ def make_distributed_bp(geom: CTGeometry, mesh, *, nb: int = 32,
             vol_local = jax.lax.psum(vol_local, "pod")
         return vol_local
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_spec, check_vma=False)
-    return fn, (in_specs[0], in_specs[1], out_spec)
+    # jit so repeated calls (projection batches, same-shape tiles) reuse
+    # one compiled program instead of re-tracing the shard_map each time
+    fn = jax.jit(_shard_map(shard_fn, mesh, in_specs, out_spec))
+    return fn, (in_specs[0], in_specs[1], in_specs[2], out_spec)
 
 
 def distributed_backproject(projections_t: jnp.ndarray, mats: jnp.ndarray,
@@ -103,15 +116,21 @@ def distributed_backproject(projections_t: jnp.ndarray, mats: jnp.ndarray,
 
     projections_t: (np, nw, nh) transposed filtered projections.
     Returns volume (nx, ny, nz) (unpadded), sharded (data, model, None).
+    ``n_proj`` need not divide ``nb``: the tail batch is padded with zero
+    images (+ repeated matrices), which contribute exactly nothing.
     """
+    from .tiling import pad_projection_batch
+
+    projections_t, mats = pad_projection_batch(projections_t, mats, nb)
     n_proj = projections_t.shape[0]
-    assert n_proj % nb == 0
-    fn, (img_spec, mat_spec, out_spec) = make_distributed_bp(
+    fn, (img_spec, mat_spec, _origin_spec, out_spec) = make_distributed_bp(
         geom, mesh, nb=nb)
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     nx_pad = _pad_up(geom.nx, axis_sizes.get("data", 1))
     ny_pad = _pad_up(geom.ny, axis_sizes.get("model", 1))
+    origin = jnp.zeros((2,), jnp.float32)
     vol = jnp.zeros((nx_pad, ny_pad, geom.nz), jnp.float32)
     for s0 in range(0, n_proj, nb):
-        vol = vol + fn(projections_t[s0:s0 + nb], mats[s0:s0 + nb])
+        vol = vol + fn(projections_t[s0:s0 + nb], mats[s0:s0 + nb],
+                       origin)
     return vol[:geom.nx, :geom.ny]

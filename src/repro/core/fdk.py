@@ -19,8 +19,34 @@ from .variants import get_variant
 
 def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     variant: str = "algorithm1_mp", *,
-                    nb: int = 8, interpret: bool = True) -> jnp.ndarray:
-    """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw)."""
+                    nb: int = 8, interpret: bool = True,
+                    tiling=None, memory_budget: int | None = None
+                    ) -> jnp.ndarray:
+    """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw).
+
+    ``tiling`` routes the back-projection through the tiled streaming
+    engine (runtime.engine.TiledReconstructor): pass a (ti, tj, tk) tile
+    shape, or "auto" with a ``memory_budget`` in bytes to have the tile
+    shape picked so one tile's working set fits the budget. ``None``
+    (default) keeps the untiled single-call path.
+
+    NOTE: the tiled path returns a host-resident numpy volume (the
+    accumulator never materializes on device — that is the point);
+    construct ``TiledReconstructor(..., out="device")`` directly if a
+    device-committed result is needed.
+    """
+    if tiling is not None or memory_budget is not None:
+        from repro.runtime.engine import TiledReconstructor
+
+        if tiling == "auto" and memory_budget is None:
+            raise ValueError(
+                "tiling='auto' needs a memory_budget (bytes) to pick the "
+                "tile shape; pass one or give an explicit (ti, tj, tk)")
+        tile_shape = None if tiling in (None, "auto") else tuple(tiling)
+        eng = TiledReconstructor(geom, variant, tile_shape=tile_shape,
+                                 memory_budget=memory_budget, nb=nb,
+                                 interpret=interpret)
+        return eng.reconstruct(projections)
     filtered = fdk_preweight_and_filter(projections, geom)
     mats = projection_matrices(geom)
     img_t = bp.transpose_projections(filtered)

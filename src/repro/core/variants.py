@@ -17,6 +17,8 @@ path) and `_pl` ~ Pallas kernels (the explicitly tiled path):
     share_mp        O1+O2
     symmetry_mp     O1+O2+O3
     subline_mp      O1+O2+O4
+    subline_batch_mp O1+O2+O4+O5 (no O3 — exact on any Z-slab; the
+                    tiled engine's slab-safe fallback)
     algorithm1_mp   O1..O5 (paper Algorithm 1; nb batching)
     subline_pl      Pallas: O1..O5 + O6 (pipelined prefetch)  [kernels/]
     onehot_pl       Pallas: beyond-paper MXU interpolation    [kernels/]
@@ -57,6 +59,10 @@ def _algorithm1(img_t, mat, vol_shape_xyz, nb: int = 8, **_):
     return bp.bp_subline_symmetry_batch(img_t, mat, vol_shape_xyz, nb=nb)
 
 
+def _subline_batch(img_t, mat, vol_shape_xyz, nb: int = 8, **_):
+    return bp.bp_subline_batch(img_t, mat, vol_shape_xyz, nb=nb)
+
+
 def _subline_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
                     interpret: bool = True, **_):
     from repro.kernels import ops
@@ -84,6 +90,7 @@ VARIANTS: Dict[str, Callable] = {
     "share_mp": _share,
     "symmetry_mp": _symmetry,
     "subline_mp": _subline,
+    "subline_batch_mp": _subline_batch,
     "algorithm1_mp": _algorithm1,
     "subline_pl": _subline_pallas,
     "onehot_pl": _onehot_pallas,
@@ -97,6 +104,7 @@ OPTIMIZATIONS: Dict[str, tuple] = {
     "share_mp": ("transpose", "share"),
     "symmetry_mp": ("transpose", "share", "symmetry"),
     "subline_mp": ("transpose", "share", "subline"),
+    "subline_batch_mp": ("transpose", "share", "subline", "batch"),
     "algorithm1_mp": ("transpose", "share", "symmetry", "subline", "batch"),
     "subline_pl": ("transpose", "share", "symmetry", "subline", "batch",
                    "localmem", "prefetch"),
@@ -105,6 +113,31 @@ OPTIMIZATIONS: Dict[str, tuple] = {
     "banded_pl": ("transpose", "share", "symmetry", "subline", "batch",
                   "localmem", "prefetch", "banded-prefetch"),
 }
+
+
+# The O3 mirror pairs voxel k with nk-1-k about the volume's Z midplane,
+# so symmetry-carrying variants are only exact on sub-boxes that are
+# centered on it (or scheduled as mirror pairs, see core.tiling.ZUnit).
+# For an arbitrary Z-slab the tiled engine swaps in the strongest
+# symmetry-free member of the ladder with the same remaining opts.
+SLAB_SAFE_FALLBACK: Dict[str, str] = {
+    "symmetry_mp": "share_mp",
+    "algorithm1_mp": "subline_batch_mp",
+    "subline_pl": "subline_batch_mp",
+    "onehot_pl": "subline_batch_mp",
+    "banded_pl": "subline_batch_mp",
+}
+
+
+def uses_symmetry(name: str) -> bool:
+    """Whether a variant's math assumes the volume-centered O3 mirror."""
+    return "symmetry" in OPTIMIZATIONS.get(name, ())
+
+
+def slab_safe_variant(name: str) -> str:
+    """Variant to run on an arbitrary (non-centered) Z-slab."""
+    return SLAB_SAFE_FALLBACK.get(name, name) if uses_symmetry(name) \
+        else name
 
 
 def get_variant(name: str) -> Callable:

@@ -216,13 +216,15 @@ def _lower_ct_cell(problem_label: str, mesh):
     geom = prob.geometry()
     nb = 32
     fn, specs = make_distributed_bp(geom, mesh, nb=nb)
-    img_spec, mat_spec, out_spec = specs
+    img_spec, mat_spec, origin_spec, out_spec = specs
     img_like = jax.ShapeDtypeStruct((nb, geom.nw, geom.nh), jnp.float32)
     mat_like = jax.ShapeDtypeStruct((nb, 3, 4), jnp.float32)
+    origin_like = jax.ShapeDtypeStruct((2,), jnp.float32)
     jf = jax.jit(fn, in_shardings=(NamedSharding(mesh, img_spec),
-                                   NamedSharding(mesh, mat_spec)),
+                                   NamedSharding(mesh, mat_spec),
+                                   NamedSharding(mesh, origin_spec)),
                  out_shardings=NamedSharding(mesh, out_spec))
-    lowered = jf.lower(img_like, mat_like)
+    lowered = jf.lower(img_like, mat_like, origin_like)
     return lowered, {"kind": "ct-backproject", "nb": nb}
 
 
@@ -253,6 +255,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             compiled = lowered.compile()
             ma = compiled.memory_analysis()
             ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):   # jax <= 0.4.x: per-device
+                ca = ca[0] if ca else {}        # list of dicts
             hlo = compiled.as_text()
             hlo_text = hlo
             coll = collective_bytes(hlo)

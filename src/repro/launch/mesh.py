@@ -10,6 +10,27 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, names):
+    """Version-portable ``jax.make_mesh``.
+
+    Newer jax wants explicit ``axis_types`` (we always mean Auto);
+    mid-0.4.x has ``jax.make_mesh`` without the kwarg; older 0.4.x has
+    neither and needs ``Mesh(create_device_mesh(...))`` directly.
+    """
+    if hasattr(jax, "make_mesh"):
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:
+            try:
+                return jax.make_mesh(
+                    shape, names,
+                    axis_types=(axis_type.Auto,) * len(names))
+            except TypeError:
+                pass
+        return jax.make_mesh(shape, names)
+    from jax.experimental import mesh_utils
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), names)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """The target deployment mesh.
 
@@ -20,16 +41,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,)
-                         * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist right now (tests / elastic restarts)."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

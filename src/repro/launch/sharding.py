@@ -42,10 +42,18 @@ _MATRIX_RULES = [
     (r"/attn/w_kr$",               ("data", None)),
     # --- attention (GQA + cross) -------------------------------------------
     (r"/(attn|cross)/wq$",         ("data", "model")),
-    (r"/(attn|cross)/wk$",         ("data", "model")),
-    (r"/(attn|cross)/wv$",         ("data", "model")),
+    # wk/wv (+ biases): NEVER model-shard the kv output dim. It is
+    # (KVH*hd) and the guard below can only check divisibility, not
+    # whole-head alignment — a split inside head_dim lands a sharded-axis
+    # slice in apply_rope (RoPE halves) for k, and for v it measurably
+    # perturbs the flash-attention train step (GQA smoke config on a
+    # (2, 2)+ mesh: loss drifts 3e-3, gnorm 30% — far beyond reduction-
+    # order noise). The GQA kv projections are the small ones (8-16x
+    # smaller than wq); FSDP over "data" keeps their memory scaled.
+    (r"/(attn|cross)/w[kv]$",      ("data", None)),
     (r"/(attn|cross)/wo$",         ("model", "data")),
-    (r"/(attn|cross)/b[qkv]$",     ("model",)),
+    (r"/(attn|cross)/bq$",         ("model",)),
+    (r"/(attn|cross)/b[kv]$",      (None,)),
     # --- MLPs ----------------------------------------------------------------
     (r"/mlp/wi(_gate|_up)?$",      ("data", "model")),
     (r"/mlp/wo$",                  ("model", "data")),

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate. Two stages:
+#
+#   1. collection smoke — EVERY test module must collect (a missing
+#      optional dependency may skip a module, but an ImportError at
+#      collection time must fail the gate, never silently shrink it);
+#   2. the exact tier-1 command from ROADMAP.md.
+#
+# Usage: tests/run_tier1.sh  (or `make tier1` from the repo root)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 stage 1/2: collection smoke =="
+# --co exits non-zero on any collection error; -m "" disables the
+# default "not slow" filter so even deselected modules must import.
+python -m pytest -q --co -m "" >/dev/null || {
+    echo "FATAL: test collection failed — a module no longer imports." >&2
+    python -m pytest -q --co -m "" 2>&1 | tail -20 >&2
+    exit 1
+}
+
+echo "== tier-1 stage 2/2: pytest -x -q =="
+exec python -m pytest -x -q "$@"

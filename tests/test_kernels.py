@@ -26,13 +26,18 @@ def _case(n, det, nproj, seed=0):
     return geom, img_t, mats, ref
 
 
-# shape sweep: even/odd volumes, non-square detectors, varied np
+# shape sweep: even/odd volumes, non-square detectors, varied np.
+# Interpret-mode Pallas runs the kernel body in Python, so each case
+# costs ~5-7 s: the redundant even case and the extra edge cases are
+# `slow` (opt in with -m slow); the default tier-1 run keeps one even
+# and the odd-everything case, which cover the padding + odd-nz paths.
 SWEEP = [
     (16, 24, 6),
-    (16, 16, 4),
+    pytest.param(16, 16, 4, marks=pytest.mark.slow),
     (13, 17, 5),     # odd everything (padding + odd-nz symmetry path)
-    (8, 32, 3),
-    (20, 12, 7),     # detector smaller than volume (heavy masking)
+    pytest.param(8, 32, 3, marks=pytest.mark.slow),
+    pytest.param(20, 12, 7,          # detector smaller (heavy masking)
+                 marks=pytest.mark.slow),
 ]
 
 
@@ -55,7 +60,11 @@ def test_onehot_kernel_sweep(n, det, nproj):
     assert rel_rmse(out, ref) < BAR
 
 
-@pytest.mark.parametrize("block", [(1, 8), (2, 8), (4, 16), (8, 8)])
+@pytest.mark.parametrize("block", [
+    (1, 8), (2, 8),
+    pytest.param((4, 16), marks=pytest.mark.slow),   # ~9 s each in
+    pytest.param((8, 8), marks=pytest.mark.slow),    # interpret mode
+])
 def test_subline_kernel_block_shapes(block):
     geom, img_t, mats, ref = _case(16, 24, 4)
     out = backproject_subline(img_t, mats, geom.volume_shape_xyz,
@@ -95,8 +104,11 @@ def test_kernel_against_ct_pipeline():
     assert rel_rmse(rec_pl, rec_jax) < BAR
 
 
-@pytest.mark.parametrize("n,det,nproj,bw", [(16, 24, 6, 8), (16, 48, 4, 16),
-                                            (13, 17, 5, 8)])
+@pytest.mark.parametrize("n,det,nproj,bw", [
+    (16, 24, 6, 8),
+    pytest.param(16, 48, 4, 16, marks=pytest.mark.slow),
+    (13, 17, 5, 8),
+])
 def test_banded_kernel_sweep(n, det, nproj, bw):
     """Beyond-paper banded scalar-prefetch kernel vs the oracle."""
     # import via ops: the submodule of the same name shadows the package

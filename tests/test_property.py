@@ -1,7 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+``hypothesis`` is an *optional* test dependency (see tests/README or the
+[test] extra): when it is absent this module skips instead of breaking
+collection of the whole tier-1 suite.
+"""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax
 import jax.numpy as jnp

@@ -109,7 +109,19 @@ def test_attn_fsdp_toggle():
     assert s == P(None, None, "model")
     s = shd.spec_for_param("layers/attn/wk", (80, 8192, 1024), MESH,
                            attn_fsdp=False)
-    assert s == P(None, "data", "model")   # wk/wv stay FSDP
+    # wk/wv stay FSDP; their kv out dim is never model-sharded (a split
+    # inside head_dim breaks RoPE halves / perturbs GQA numerics).
+    assert s == P(None, "data", None)
+
+
+def test_kv_projections_never_model_sharded():
+    for name in ("wk", "wv"):
+        s = shd.spec_for_param(f"layers/attn/{name}", (80, 8192, 1024),
+                               MESH)
+        assert s == P(None, "data", None), name
+    for name in ("bk", "bv"):
+        s = shd.spec_for_param(f"layers/attn/{name}", (80, 1024), MESH)
+        assert s == P(None, None), name
 
 
 def test_zero1_optimizer_specs():
