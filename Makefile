@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 tier1-slow collect-smoke bench-tiled
+.PHONY: tier1 tier1-slow collect-smoke bench-tiled bench-smoke
 
 tier1:
 	tests/run_tier1.sh
@@ -15,3 +15,6 @@ collect-smoke:                 # collection must never silently fail
 
 bench-tiled:
 	$(PY) -m benchmarks.bench_tiled
+
+bench-smoke:                   # perf-trajectory snapshot (non-gating)
+	$(PY) -m benchmarks.bench_smoke --json BENCH_PR2.json

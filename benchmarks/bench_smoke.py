@@ -1,0 +1,45 @@
+"""Smoke-size perf snapshot: variant ladder + tiled sweep -> JSON.
+
+Seeds the repo's perf trajectory (BENCH_PR2.json and successors): runs
+the optimization-ladder timing (``bench_variants``) and the tiled-engine
+sweep (``bench_tiled``) at sizes small enough for CI, and dumps every
+emitted row as structured JSON via ``common.write_json``. Wired as a
+NON-GATING stage of tests/run_tier1.sh (`make bench-smoke`): a perf
+regression shows up in the trajectory diff, not as a red build.
+
+    PYTHONPATH=src python -m benchmarks.bench_smoke --json BENCH_PR2.json
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from . import bench_tiled, bench_variants, common
+
+# Smoke sizes: big enough that tiling/batching structure is exercised
+# (several tiles, several nb-batches), small enough for a CI stage.
+SMOKE = dict(n=24, n_det=32, n_proj=16, nb=4)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write emitted rows as a perf-trajectory JSON")
+    ap.add_argument("--n", type=int, default=SMOKE["n"])
+    ap.add_argument("--n-det", type=int, default=SMOKE["n_det"])
+    ap.add_argument("--n-proj", type=int, default=SMOKE["n_proj"])
+    ap.add_argument("--nb", type=int, default=SMOKE["nb"])
+    args = ap.parse_args(argv)
+
+    common.reset_records()
+    sizes = dict(n=args.n, n_det=args.n_det, n_proj=args.n_proj, nb=args.nb)
+    print("# --- variants (smoke) ---")
+    bench_variants.run(**sizes)
+    print("# --- tiled (smoke) ---")
+    bench_tiled.run(**sizes)
+    if args.json:
+        common.write_json(args.json, meta={"suite": "bench_smoke", **sizes})
+
+
+if __name__ == "__main__":
+    main()

@@ -57,7 +57,19 @@ def run(n: int = 48, n_det: int = 64, n_proj: int = 32, nb: int = 8):
         emit(f"tiled/{VARIANT}_t{tile[0]}x{tile[1]}x{tile[2]}", t * 1e6,
              f"gups={gups(geom, t):.3f} tax={t / t_ref:.2f}x "
              f"ws_mib={eng.working_set_bytes / 2**20:.1f} "
-             f"tiles={len(eng.plan()[0]) * len(eng.plan()[1])}")
+             f"steps={len(eng.recon_plan.steps)} "
+             f"programs={len(eng.recon_plan.program_keys)}")
+
+    # streamed filtering: chunked FDK (filter fused into the chunk loop)
+    # vs the whole-set filter — same tiles, bounded projection memory
+    raw = jnp.asarray(rng.rand(n_proj, geom.nh, geom.nw).astype(np.float32))
+    for pb in (None, max(nb, n_proj // 4)):
+        eng = TiledReconstructor(geom, VARIANT, tile_shape=(n // 2, n // 2, n),
+                                 nb=nb, proj_batch=pb)
+        t = time_fn(lambda e=eng: e.reconstruct(raw))
+        emit(f"tiled/reconstruct_pb{pb or 'all'}", t * 1e6,
+             f"gups={gups(geom, t):.3f} chunks={len(eng.recon_plan.chunks)} "
+             f"streamed={int(eng.recon_plan.streams_projections)}")
 
     # auto-picker: half / quarter of the untiled working set
     for frac in (2, 4):

@@ -1,8 +1,20 @@
-"""Shared benchmark utilities: timing, GUPS, CSV emission."""
+"""Shared benchmark utilities: timing, GUPS, CSV + JSON emission.
+
+Every suite prints ``name,us_per_call,derived`` CSV rows through
+:func:`emit`; rows are also recorded in-process so a driver can dump the
+whole run as structured JSON (:func:`write_json` — the ``--json`` flag of
+``benchmarks.bench_smoke`` / ``benchmarks.run``). The JSON records parse
+the ``k=v`` tokens of the derived string into a dict, so downstream
+tooling (the perf-trajectory files like BENCH_PR2.json) never has to
+re-parse free text.
+"""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -25,6 +37,56 @@ def gups(geom, t: float, n_proj: int | None = None) -> float:
     return geom.voxel_updates(n_proj) / t / 1e9
 
 
+# ---- emission -------------------------------------------------------------
+
+_RECORDS: List[Dict] = []
+
+
+def _parse_derived(derived: str) -> Dict[str, object]:
+    """Parse the ``k=v`` tokens of a derived string (best effort)."""
+    out: Dict[str, object] = {}
+    for tok in derived.split():
+        if "=" not in tok:
+            continue
+        k, v = tok.split("=", 1)
+        try:
+            out[k] = float(v.rstrip("x"))
+        except ValueError:
+            out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str):
-    """The harness CSV contract: name,us_per_call,derived."""
+    """The harness CSV contract: name,us_per_call,derived (+ JSON record)."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                     "derived": derived,
+                     "metrics": _parse_derived(derived)})
+
+
+def records() -> List[Dict]:
+    """All rows emitted since the last :func:`reset_records`."""
+    return list(_RECORDS)
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+def write_json(path: str, meta: Optional[Dict] = None) -> None:
+    """Dump recorded rows (+ run metadata) as a perf-trajectory JSON."""
+    doc = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "jax_version": jax.__version__,
+            "python": platform.python_version(),
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            **(meta or {}),
+        },
+        "records": records(),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {len(doc['records'])} records -> {path}")

@@ -23,10 +23,18 @@ from .tiling import (  # noqa: F401
     make_tiles,
     pad_projection_batch,
     pick_tile_shape,
+    plan_proj_chunks,
     plan_z_slabs,
     plan_z_units,
     translate_matrices,
 )
-from .variants import VARIANTS, get_variant, slab_safe_variant  # noqa: F401
+from .variants import (  # noqa: F401
+    KernelSpec,
+    REGISTRY,
+    VARIANTS,
+    get_spec,
+    get_variant,
+    slab_safe_variant,
+)
 from .fdk import fdk_reconstruct  # noqa: F401
 from .phantom import ball_phantom, shepp_logan_3d  # noqa: F401

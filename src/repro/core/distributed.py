@@ -111,26 +111,38 @@ def make_distributed_bp(geom: CTGeometry, mesh, *, nb: int = 32,
 
 
 def distributed_backproject(projections_t: jnp.ndarray, mats: jnp.ndarray,
-                            geom: CTGeometry, mesh, *, nb: int = 32):
+                            geom: CTGeometry, mesh, *, nb: int = 32,
+                            variant: str = "scan"):
     """Full distributed reconstruction loop over projection batches.
 
     projections_t: (np, nw, nh) transposed filtered projections.
     Returns volume (nx, ny, nz) (unpadded), sharded (data, model, None).
     ``n_proj`` need not divide ``nb``: the tail batch is padded with zero
     images (+ repeated matrices), which contribute exactly nothing.
+
+    The projection-chunk schedule comes from the planner's chunk
+    substrate (``tiling.plan_proj_chunks``, exactly-nb batches over the
+    actual padded extent), and the shard_map program is memoized in the
+    shared ProgramCache, so repeated calls on one geometry + mesh never
+    rebuild it. The tiled composition (``TiledReconstructor
+    .backproject_distributed``) routes through a full ReconPlan.
     """
-    from .tiling import pad_projection_batch
+    from repro.runtime.executor import default_program_cache
+    from .tiling import pad_projection_batch, plan_proj_chunks
 
     projections_t, mats = pad_projection_batch(projections_t, mats, nb)
-    n_proj = projections_t.shape[0]
-    fn, (img_spec, mat_spec, _origin_spec, out_spec) = make_distributed_bp(
-        geom, mesh, nb=nb)
+    # chunk the ACTUAL padded extent by exactly-nb batches (the program's
+    # batch size); geom/mesh are hashable, so the shared cache keys on
+    # their values and equal setups reuse one shard_map program
+    _, _, chunks = plan_proj_chunks(projections_t.shape[0], nb, nb)
+    fn = default_program_cache().get_or_build(
+        ("dist", variant, geom.volume_shape_xyz, nb, geom, mesh),
+        lambda: make_distributed_bp(geom, mesh, nb=nb, variant=variant)[0])
     axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     nx_pad = _pad_up(geom.nx, axis_sizes.get("data", 1))
     ny_pad = _pad_up(geom.ny, axis_sizes.get("model", 1))
     origin = jnp.zeros((2,), jnp.float32)
     vol = jnp.zeros((nx_pad, ny_pad, geom.nz), jnp.float32)
-    for s0 in range(0, n_proj, nb):
-        vol = vol + fn(projections_t[s0:s0 + nb], mats[s0:s0 + nb],
-                       origin)
+    for s0, s1 in chunks:
+        vol = vol + fn(projections_t[s0:s1], mats[s0:s1], origin)
     return vol[:geom.nx, :geom.ny]

@@ -3,62 +3,95 @@
 This is the paper's application context: FDK calls back-projection once;
 iterative algorithms (SART/MLEM/...) call forward+back projection per
 iteration — either way back-projection dominates, which is why the paper
-optimizes it. The pipeline is variant-parameterized so every kernel in
-``core.variants`` (and the Pallas kernels) is drop-in.
+optimizes it. Both entry points here are thin façades over the repo's
+plan/compile/execute core (``runtime.planner`` / ``runtime.executor``):
+the planner owns scheduling and option validation, the shared program
+cache owns compilation, and the executor streams projection chunks —
+so the untiled, tiled, and iterative paths are one code path with
+different plans.
 """
 
 from __future__ import annotations
 
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
 import jax.numpy as jnp
 
-from . import backproject as bp
-from .filtering import fdk_preweight_and_filter
 from .geometry import CTGeometry, projection_matrices
-from .variants import get_variant
+
+
+def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
+                tiling, memory_budget: Optional[int],
+                proj_batch: Optional[int], out: Optional[str],
+                **kernel_options):
+    """Shared façade-to-planner translation (tiling= conventions)."""
+    from repro.runtime.planner import plan_reconstruction
+
+    tiled = tiling is not None or memory_budget is not None
+    if tiling == "auto" and memory_budget is None:
+        raise ValueError(
+            "tiling='auto' needs a memory_budget (bytes) to pick the "
+            "tile shape; pass one or give an explicit (ti, tj, tk)")
+    tile_shape = None if tiling in (None, "auto") else tuple(tiling)
+    if out is None:
+        out = "host" if tiled else "device"
+    return plan_reconstruction(
+        geom, variant, tile_shape=tile_shape, memory_budget=memory_budget,
+        nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
+        **kernel_options)
 
 
 def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     variant: str = "algorithm1_mp", *,
                     nb: int = 8, interpret: bool = True,
-                    tiling=None, memory_budget: int | None = None
-                    ) -> jnp.ndarray:
+                    tiling: Union[None, str, Sequence[int]] = None,
+                    memory_budget: Optional[int] = None,
+                    proj_batch: Optional[int] = None,
+                    out: Optional[str] = None,
+                    **kernel_options) -> jnp.ndarray:
     """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw).
 
-    ``tiling`` routes the back-projection through the tiled streaming
-    engine (runtime.engine.TiledReconstructor): pass a (ti, tj, tk) tile
-    shape, or "auto" with a ``memory_budget`` in bytes to have the tile
-    shape picked so one tile's working set fits the budget. ``None``
-    (default) keeps the untiled single-call path.
+    ``tiling`` routes the back-projection through the tiled schedule:
+    pass a (ti, tj, tk) tile shape, or "auto" with a ``memory_budget`` in
+    bytes to have the tile shape picked so one tile's working set fits
+    the budget. ``None`` (default) keeps the untiled single-call plan.
 
-    NOTE: the tiled path returns a host-resident numpy volume (the
-    accumulator never materializes on device — that is the point);
-    construct ``TiledReconstructor(..., out="device")`` directly if a
-    device-committed result is needed.
+    ``proj_batch`` streams the projections through in chunks of that
+    many views (rounded up to a multiple of ``nb``), with FDK
+    pre-weighting + ramp filtering fused into the chunk loop — neither
+    the volume NOR the filtered projection set need fit in memory.
+
+    ``out`` selects the accumulator placement ("host" | "device");
+    the default is "host" for tiled plans (the accumulator never
+    materializes on device — that is the point) and "device" for the
+    untiled plan. All parameter validation happens in the planner.
     """
-    if tiling is not None or memory_budget is not None:
-        from repro.runtime.engine import TiledReconstructor
+    from repro.runtime.executor import PlanExecutor
 
-        if tiling == "auto" and memory_budget is None:
-            raise ValueError(
-                "tiling='auto' needs a memory_budget (bytes) to pick the "
-                "tile shape; pass one or give an explicit (ti, tj, tk)")
-        tile_shape = None if tiling in (None, "auto") else tuple(tiling)
-        eng = TiledReconstructor(geom, variant, tile_shape=tile_shape,
-                                 memory_budget=memory_budget, nb=nb,
-                                 interpret=interpret)
-        return eng.reconstruct(projections)
-    filtered = fdk_preweight_and_filter(projections, geom)
-    mats = projection_matrices(geom)
-    img_t = bp.transpose_projections(filtered)
-    fn = get_variant(variant)
-    vol_t = fn(img_t, mats, geom.volume_shape_xyz, nb=nb, interpret=interpret)
+    plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
+                       tiling=tiling, memory_budget=memory_budget,
+                       proj_batch=proj_batch, out=out, **kernel_options)
+    return PlanExecutor(geom, plan).reconstruct(projections)
+
+
+def _vol_to_native(vol_t):
+    """(nx, ny, nz) -> (nz, ny, nx) for either host or device arrays."""
+    if isinstance(vol_t, np.ndarray):
+        return np.transpose(vol_t, (2, 1, 0))
+    from . import backproject as bp
     return bp.volume_to_native(vol_t)
 
 
 def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
               geom: CTGeometry, *, relax: float = 0.25,
               variant: str = "algorithm1_mp", nb: int = 8,
-              oversample: float = 1.0) -> jnp.ndarray:
+              oversample: float = 1.0, interpret: bool = True,
+              tiling: Union[None, str, Sequence[int]] = None,
+              memory_budget: Optional[int] = None,
+              proj_batch: Optional[int] = None,
+              **kernel_options) -> jnp.ndarray:
     """One SART update (demonstrates the paper's iterative-recon use).
 
     Standard SART (Andersen & Kak):
@@ -68,19 +101,35 @@ def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
     FP(1_vol) are the per-ray intersection lengths (projection-domain
     row sums of the system matrix); BP(1) the voxel-domain column sums.
     Both normalizers reuse the same forward/back projection kernels.
+
+    Both back-projections route through one :class:`ReconPlan`, so
+    ``interpret=`` reaches the Pallas variants and ``tiling=`` /
+    ``memory_budget=`` / ``proj_batch=`` give iterative reconstruction
+    the same out-of-core streaming as ``fdk_reconstruct``.
     """
+    from repro.runtime.executor import PlanExecutor
+    from . import backproject as bp
     from .forward import forward_project
+
+    # out="device" even when tiled: SART's forward projection needs the
+    # volume on device every iteration anyway, so host staging of the
+    # BP accumulators would only add two full-volume round-trips. The
+    # tiling/proj_batch benefit here is the bounded PER-CALL working set
+    # (kernel temporaries), not accumulator placement.
+    plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
+                       tiling=tiling, memory_budget=memory_budget,
+                       proj_batch=proj_batch, out="device",
+                       **kernel_options)
+    ex = PlanExecutor(geom, plan)
 
     mats = projection_matrices(geom)
     est = forward_project(vol_zyx, geom, oversample=oversample)
     ray_len = forward_project(jnp.ones_like(vol_zyx), geom,
                               oversample=oversample)
     resid = (projections - est) / jnp.maximum(ray_len, 1e-3)
-    img_t = bp.transpose_projections(resid)
-    fn = get_variant(variant)
-    upd_t = fn(img_t, mats, geom.volume_shape_xyz, nb=nb)
+    upd = _vol_to_native(ex.backproject(bp.transpose_projections(resid),
+                                        mats))
     ones_t = bp.transpose_projections(jnp.ones_like(projections))
-    norm_t = fn(ones_t, mats, geom.volume_shape_xyz, nb=nb)
-    upd = bp.volume_to_native(upd_t)
-    norm = bp.volume_to_native(norm_t)
-    return vol_zyx + relax * upd / jnp.maximum(norm, 1e-12)
+    norm = _vol_to_native(ex.backproject(ones_t, mats))
+    return vol_zyx + relax * jnp.asarray(upd) / jnp.maximum(
+        jnp.asarray(norm), 1e-12)

@@ -43,11 +43,21 @@ def ramlak_kernel_spatial(n_taps: int, du: float) -> np.ndarray:
     return h
 
 
-@functools.partial(jax.jit, static_argnames=("geom",))
-def fdk_preweight_and_filter(projections: jnp.ndarray,
-                             geom: CTGeometry) -> jnp.ndarray:
-    """(np, nh, nw) raw projections -> filtered projections, same shape."""
-    n_proj, nh, nw = projections.shape
+@functools.partial(jax.jit, static_argnames=("geom", "n_proj_total"))
+def fdk_filter_chunk(projections: jnp.ndarray, geom: CTGeometry,
+                     n_proj_total: int) -> jnp.ndarray:
+    """Pre-weight + ramp-filter a CHUNK of raw projections.
+
+    The filter is row-wise and per-projection independent, so filtering
+    any partition of the projection set chunk-by-chunk is bitwise
+    identical to filtering the whole array at once — this is what lets
+    the streaming executor (runtime.executor) fuse filtering into the
+    projection-chunk loop and never materialize the filtered set whole.
+    The only whole-set dependence is the FDK angular step ``dtheta =
+    2*pi / n_proj_total``, which therefore must be passed explicitly
+    (the chunk's own leading dimension would mis-scale the result).
+    """
+    _, nh, nw = projections.shape
     d, D = geom.sad, geom.sdd
     du, dv = geom.det_spacing
     cu = (nw - 1) / 2.0
@@ -74,6 +84,15 @@ def fdk_preweight_and_filter(projections: jnp.ndarray,
     filt = jnp.fft.irfft(x * H[None, None, :], n=pad, axis=-1)[..., :nw]
 
     # FDK scale: (1/2) * dtheta * du' * d^2 (d^2 folded here; BP uses 1/z^2).
-    dtheta = 2.0 * math.pi / n_proj
+    dtheta = 2.0 * math.pi / int(n_proj_total)
     scale = 0.5 * dtheta * du_virt * d * d
     return (filt * scale).astype(jnp.float32)
+
+
+def fdk_preweight_and_filter(projections: jnp.ndarray,
+                             geom: CTGeometry) -> jnp.ndarray:
+    """(np, nh, nw) raw projections -> filtered projections, same shape.
+
+    Whole-set form: one chunk spanning every projection (the seed path).
+    """
+    return fdk_filter_chunk(projections, geom, projections.shape[0])

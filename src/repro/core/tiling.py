@@ -205,6 +205,31 @@ def pick_tile_shape(vol_shape_xyz: Sequence[int],
     return (ti, tj, tk)
 
 
+def plan_proj_chunks(n_proj: int, nb: int,
+                     proj_batch: int | None = None
+                     ) -> Tuple[int, int, List[Tuple[int, int]]]:
+    """Projection-chunk schedule: (n_padded, chunk_size, [(s0, s1), ...]).
+
+    The projection axis is padded up to a multiple of ``nb`` (see
+    ``pad_projection_batch`` for the zero-image/repeated-matrix padding
+    that makes this exact) and covered by disjoint chunks of
+    ``proj_batch`` rounded UP to an nb multiple (``None`` = one chunk).
+    Every chunk size is an nb multiple, so nb-batched variants accept
+    any chunk without re-padding — the pad happens once, globally.
+    """
+    n_proj, nb = int(n_proj), max(1, int(nb))
+    n_pad = -(-n_proj // nb) * nb
+    if proj_batch is None:
+        chunk = n_pad
+    else:
+        proj_batch = int(proj_batch)
+        if proj_batch < 1:
+            raise ValueError(f"proj_batch must be >= 1, got {proj_batch}")
+        chunk = min(n_pad, -(-proj_batch // nb) * nb)
+    return n_pad, chunk, [(s0, min(s0 + chunk, n_pad))
+                          for s0 in range(0, n_pad, chunk)]
+
+
 def pad_projection_batch(img_t: jnp.ndarray, mat: jnp.ndarray,
                          multiple: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Pad (np, nw, nh) projections + (np, 3, 4) matrices to a multiple.

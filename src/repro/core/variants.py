@@ -1,6 +1,15 @@
-"""Registry of back-projection kernel variants (paper Table 2).
+"""Declarative registry of back-projection kernel variants (paper Table 2).
 
-Maps variant names to callables with the uniform signature
+Each variant is a :class:`KernelSpec` — a capability record the planner
+(``runtime.planner``) consumes to schedule work: which paper optimizations
+the kernel carries, which call-time options it accepts, and which
+symmetry-free member of the ladder substitutes for it on Z-slabs that are
+not centered on the volume midplane (the O3 mirror pairs voxel ``k`` with
+``nk-1-k`` about the FULL volume's Z center, so symmetry-carrying kernels
+are only exact on centered sub-boxes or mirror-paired slab calls — see
+``core.tiling.ZUnit``).
+
+Every kernel callable has the uniform signature
 
     fn(img_t, mat, vol_shape_xyz, **opts) -> vol_t (nx, ny, nz)
 
@@ -18,19 +27,29 @@ path) and `_pl` ~ Pallas kernels (the explicitly tiled path):
     symmetry_mp     O1+O2+O3
     subline_mp      O1+O2+O4
     subline_batch_mp O1+O2+O4+O5 (no O3 — exact on any Z-slab; the
-                    tiled engine's slab-safe fallback)
+                    planner's slab-safe fallback)
     algorithm1_mp   O1..O5 (paper Algorithm 1; nb batching)
     subline_pl      Pallas: O1..O5 + O6 (pipelined prefetch)  [kernels/]
     onehot_pl       Pallas: beyond-paper MXU interpolation    [kernels/]
+    banded_pl       Pallas: beyond-paper banded prefetch      [kernels/]
+
+``VARIANTS`` / ``OPTIMIZATIONS`` / ``SLAB_SAFE_FALLBACK`` — the three
+ad-hoc dicts this registry replaces — are kept as *derived* read-only
+views for existing callers; ``REGISTRY`` is the source of truth.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+import dataclasses
+from typing import Callable, Dict, FrozenSet, Mapping, Optional, Tuple
 
 from . import backproject as bp
 from . import baseline as bl
 
+
+# --------------------------------------------------------------------------
+# Kernel callables (uniform signature adapters)
+# --------------------------------------------------------------------------
 
 def _baseline_adapter(img_t, mat, vol_shape_xyz, **_):
     img = bp.transpose_projections(img_t)  # back to (np, nh, nw)
@@ -64,84 +83,175 @@ def _subline_batch(img_t, mat, vol_shape_xyz, nb: int = 8, **_):
 
 
 def _subline_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
-                    interpret: bool = True, **_):
+                    interpret: bool = True, block=(4, 8), **_):
     from repro.kernels import ops
     return ops.backproject_subline(img_t, mat, vol_shape_xyz, nb=nb,
-                                   interpret=interpret)
+                                   block=block, interpret=interpret)
 
 
 def _onehot_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
-                   interpret: bool = True, **_):
+                   interpret: bool = True, block=(4, 8),
+                   k_chunk: int = 128, **_):
     from repro.kernels import ops
     return ops.backproject_onehot(img_t, mat, vol_shape_xyz, nb=nb,
+                                  block=block, k_chunk=k_chunk,
                                   interpret=interpret)
 
 
 def _banded_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
-                   interpret: bool = True, **_):
+                   interpret: bool = True, block=(4, 8), bw: int = 32, **_):
     from repro.kernels import ops
     return ops.backproject_banded(img_t, mat, vol_shape_xyz, nb=nb,
-                                  interpret=interpret)
+                                  block=block, bw=bw, interpret=interpret)
 
 
-VARIANTS: Dict[str, Callable] = {
-    "baseline": _baseline_adapter,
-    "transpose_mp": _transpose,
-    "share_mp": _share,
-    "symmetry_mp": _symmetry,
-    "subline_mp": _subline,
-    "subline_batch_mp": _subline_batch,
-    "algorithm1_mp": _algorithm1,
-    "subline_pl": _subline_pallas,
-    "onehot_pl": _onehot_pallas,
-    "banded_pl": _banded_pallas,
-}
+# --------------------------------------------------------------------------
+# KernelSpec: one declarative capability record per variant
+# --------------------------------------------------------------------------
 
-# Which paper optimizations each variant carries (paper Table 2 columns).
-OPTIMIZATIONS: Dict[str, tuple] = {
-    "baseline": (),
-    "transpose_mp": ("transpose",),
-    "share_mp": ("transpose", "share"),
-    "symmetry_mp": ("transpose", "share", "symmetry"),
-    "subline_mp": ("transpose", "share", "subline"),
-    "subline_batch_mp": ("transpose", "share", "subline", "batch"),
-    "algorithm1_mp": ("transpose", "share", "symmetry", "subline", "batch"),
-    "subline_pl": ("transpose", "share", "symmetry", "subline", "batch",
-                   "localmem", "prefetch"),
-    "onehot_pl": ("transpose", "share", "symmetry", "subline", "batch",
-                  "localmem", "prefetch", "mxu-interp"),
-    "banded_pl": ("transpose", "share", "symmetry", "subline", "batch",
-                  "localmem", "prefetch", "banded-prefetch"),
-}
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Capability record for one back-projection kernel.
+
+    Fields
+    ------
+    name : registry key (paper Table 2 naming).
+    fn : kernel callable with the uniform transposed signature.
+    optimizations : which paper optimizations the kernel carries
+        (Table 2 columns; ``"symmetry"`` has scheduling consequences).
+    options : call-time keyword options the kernel actually consumes.
+        The planner filters resolved options through this set so kernels
+        never see (and silently swallow) irrelevant knobs.
+    slab_safe_fallback : name of the strongest symmetry-free variant with
+        the same remaining optimizations — what the planner schedules on
+        a Z-slab that is neither volume-centered nor mirror-paired.
+        ``None`` for symmetry-free kernels (they are their own fallback).
+    backend : "reference" | "jax" | "pallas" (Pallas kernels accept
+        ``interpret=`` and run under the interpreter on CPU CI).
+    jittable : whether the kernel tolerates traced inputs under an outer
+        ``jax.jit`` (the program cache wraps jittable kernels; a kernel
+        that inspects concrete matrix VALUES at trace time — e.g. the
+        banded kernel's data-dependent band schedule — must opt out and
+        is cached un-wrapped instead).
+    """
+
+    name: str
+    fn: Callable
+    optimizations: Tuple[str, ...]
+    options: FrozenSet[str] = frozenset()
+    slab_safe_fallback: Optional[str] = None
+    backend: str = "jax"
+    jittable: bool = True
+
+    @property
+    def uses_symmetry(self) -> bool:
+        """Whether the kernel's math assumes the volume-centered O3 mirror."""
+        return "symmetry" in self.optimizations
+
+    @property
+    def is_pallas(self) -> bool:
+        return self.backend == "pallas"
+
+    def resolve_options(self, opts: Mapping) -> Dict:
+        """Filter caller options down to the ones this kernel accepts."""
+        return {k: v for k, v in opts.items()
+                if k in self.options and v is not None}
 
 
-# The O3 mirror pairs voxel k with nk-1-k about the volume's Z midplane,
-# so symmetry-carrying variants are only exact on sub-boxes that are
-# centered on it (or scheduled as mirror pairs, see core.tiling.ZUnit).
-# For an arbitrary Z-slab the tiled engine swaps in the strongest
-# symmetry-free member of the ladder with the same remaining opts.
+_PL_OPTS = frozenset({"nb", "interpret", "block"})
+
+REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
+    KernelSpec("baseline", _baseline_adapter, (), backend="reference"),
+    KernelSpec("transpose_mp", _transpose, ("transpose",)),
+    KernelSpec("share_mp", _share, ("transpose", "share")),
+    KernelSpec("symmetry_mp", _symmetry,
+               ("transpose", "share", "symmetry"),
+               slab_safe_fallback="share_mp"),
+    KernelSpec("subline_mp", _subline, ("transpose", "share", "subline")),
+    KernelSpec("subline_batch_mp", _subline_batch,
+               ("transpose", "share", "subline", "batch"),
+               options=frozenset({"nb"})),
+    KernelSpec("algorithm1_mp", _algorithm1,
+               ("transpose", "share", "symmetry", "subline", "batch"),
+               options=frozenset({"nb"}),
+               slab_safe_fallback="subline_batch_mp"),
+    KernelSpec("subline_pl", _subline_pallas,
+               ("transpose", "share", "symmetry", "subline", "batch",
+                "localmem", "prefetch"),
+               options=_PL_OPTS,
+               slab_safe_fallback="subline_batch_mp", backend="pallas"),
+    KernelSpec("onehot_pl", _onehot_pallas,
+               ("transpose", "share", "symmetry", "subline", "batch",
+                "localmem", "prefetch", "mxu-interp"),
+               options=_PL_OPTS | {"k_chunk"},
+               slab_safe_fallback="subline_batch_mp", backend="pallas"),
+    # jittable=False: the band schedule is computed from concrete matrix
+    # values at trace time (np.asarray(mat) in the kernel wrapper)
+    KernelSpec("banded_pl", _banded_pallas,
+               ("transpose", "share", "symmetry", "subline", "batch",
+                "localmem", "prefetch", "banded-prefetch"),
+               options=_PL_OPTS | {"bw"},
+               slab_safe_fallback="subline_batch_mp", backend="pallas",
+               jittable=False),
+)}
+
+
+def _validate_registry() -> None:
+    for spec in REGISTRY.values():
+        if spec.uses_symmetry:
+            fb = spec.slab_safe_fallback
+            if fb is None or fb not in REGISTRY:
+                raise ValueError(
+                    f"symmetry variant {spec.name!r} needs a registered "
+                    f"slab_safe_fallback, got {fb!r}")
+            fspec = REGISTRY[fb]
+            if fspec.uses_symmetry:
+                raise ValueError(
+                    f"{spec.name!r} fallback {fb!r} still uses symmetry")
+            if not set(fspec.optimizations) <= set(spec.optimizations):
+                raise ValueError(
+                    f"{spec.name!r} fallback {fb!r} adds optimizations "
+                    f"the primary does not carry")
+        elif spec.slab_safe_fallback is not None:
+            raise ValueError(
+                f"symmetry-free variant {spec.name!r} must not declare a "
+                f"slab_safe_fallback")
+
+
+_validate_registry()
+
+
+# --------------------------------------------------------------------------
+# Derived legacy views + lookups
+# --------------------------------------------------------------------------
+
+VARIANTS: Dict[str, Callable] = {n: s.fn for n, s in REGISTRY.items()}
+
+OPTIMIZATIONS: Dict[str, tuple] = {n: s.optimizations
+                                   for n, s in REGISTRY.items()}
+
 SLAB_SAFE_FALLBACK: Dict[str, str] = {
-    "symmetry_mp": "share_mp",
-    "algorithm1_mp": "subline_batch_mp",
-    "subline_pl": "subline_batch_mp",
-    "onehot_pl": "subline_batch_mp",
-    "banded_pl": "subline_batch_mp",
-}
+    n: s.slab_safe_fallback for n, s in REGISTRY.items()
+    if s.slab_safe_fallback is not None}
+
+
+def get_spec(name: str) -> KernelSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown back-projection variant {name!r}; "
+                       f"have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_variant(name: str) -> Callable:
+    return get_spec(name).fn
 
 
 def uses_symmetry(name: str) -> bool:
     """Whether a variant's math assumes the volume-centered O3 mirror."""
-    return "symmetry" in OPTIMIZATIONS.get(name, ())
+    return get_spec(name).uses_symmetry
 
 
 def slab_safe_variant(name: str) -> str:
     """Variant to run on an arbitrary (non-centered) Z-slab."""
-    return SLAB_SAFE_FALLBACK.get(name, name) if uses_symmetry(name) \
-        else name
-
-
-def get_variant(name: str) -> Callable:
-    if name not in VARIANTS:
-        raise KeyError(f"unknown back-projection variant {name!r}; "
-                       f"have {sorted(VARIANTS)}")
-    return VARIANTS[name]
+    spec = get_spec(name)
+    return spec.slab_safe_fallback if spec.uses_symmetry else name

@@ -19,6 +19,17 @@ from .backproject_banded import backproject_banded as _backproject_banded
 from .backproject_onehot import backproject_onehot_pallas
 from .backproject_subline import backproject_subline_pallas
 
+# KernelSpec contract (core.variants.REGISTRY): the call-time options each
+# public wrapper consumes. The registry's Pallas KernelSpecs must declare
+# exactly these sets — tests/test_planner.py cross-checks the two layers
+# so a new kernel knob cannot be added here without the planner (which
+# filters options through KernelSpec.options) learning about it.
+ACCEPTED_OPTIONS = {
+    "backproject_subline": frozenset({"nb", "block", "interpret"}),
+    "backproject_onehot": frozenset({"nb", "block", "k_chunk", "interpret"}),
+    "backproject_banded": frozenset({"nb", "block", "bw", "interpret"}),
+}
+
 
 def _pad_to(n: int, b: int) -> int:
     return ((n + b - 1) // b) * b

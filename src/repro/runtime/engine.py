@@ -1,59 +1,62 @@
-"""Tiled streaming reconstruction engine (out-of-core back-projection).
+"""Tiled streaming reconstruction — the plan/compile/execute façade.
 
-Why
----
-The pure-JAX ladder materializes full ``(nx, ny, nz)`` temporaries — and
-under the in-batch vmap of Algorithm 1, ``nb`` of them — so nothing above
-toy sizes fits in device memory. The paper's whole point (§3.1) is that
-back-projection should run out of a *bounded working set*: transposed
-layouts, sub-line buffers and nb-batched accumulation keep the hot loop
-inside cache. This engine applies the same discipline one level up, at
-volume granularity: it decomposes the volume into ``(i, j)``-tiles x
-Z-slabs and streams projection batches through ANY registered variant per
-tile, so every variant gets an O(tile) working set and volumes larger
-than device memory become reconstructable (the blocking of Treibig et
-al., arXiv:1104.5243, composed with the iFDK slab scale-out scheme,
-arXiv:1909.02724, that the authors themselves built).
+Architecture (docs/ARCHITECTURE.md)
+-----------------------------------
+Since PR 2 every reconstruction entry point in this repo — untiled
+``fdk_reconstruct``, this tiled engine, ``sart_step``, and the
+distributed driver — is a thin façade over the same three-stage core:
 
-How
----
-The enabling identity is matrix translation (``core.tiling``): projecting
-voxel ``(i+i0, j+j0, k+k0)`` equals projecting ``(i, j, k)`` under a
-matrix whose constant column absorbs the offset, so the single-device
-kernels — pure-JAX ladder or Pallas — reconstruct any sub-box UNCHANGED.
-Two subtleties:
+  1. **plan** — ``runtime.planner.plan_reconstruction`` builds a pure
+     :class:`~repro.runtime.planner.ReconPlan`: the (i, j)-tile x Z-slab
+     schedule (mirror-paired for O3 symmetry variants, depth-bounded
+     plain slabs otherwise), per-step variant resolution against the
+     declarative ``KernelSpec`` registry (``core.variants.REGISTRY``),
+     matrix-translation offsets, the projection-chunk schedule, and ALL
+     option validation.
+  2. **compile** — ``runtime.executor.ProgramCache`` maps
+     ``(variant, call_shape, nb, dtype, interpret)`` keys to jitted
+     programs. Interior tiles share shapes, so a plan with hundreds of
+     steps compiles a handful of programs; repeated ``reconstruct``
+     calls hit the shared cache and never retrace.
+  3. **execute** — ``runtime.executor.PlanExecutor`` walks the plan:
+     projections stream through in chunks with FDK pre-weighting + ramp
+     filtering fused INTO the chunk loop (filtered projections are never
+     materialized whole), and host placement is double-buffered so the
+     device->host copy of tile ``n`` overlaps tile ``n+1``'s compute.
 
-* the O3 detector-row symmetry pairs voxel ``k`` with ``nz-1-k`` about
-  the FULL volume's Z midplane, so symmetry-carrying variants are only
-  exact on Z-centered boxes. The engine schedules Z-slabs in *mirror
-  pairs* (one variant call of virtual depth ``2*bk`` fills both slabs —
-  the O3 flop saving survives tiling) plus a centered middle slab;
-  arbitrary, non-pairable slabs fall back to the strongest symmetry-free
-  member of the ladder (``variants.slab_safe_variant``);
-* nb-batched variants need ``np % nb == 0``: the engine pads tail
-  batches with zero images + repeated matrices (exactly zero
-  contribution, no 1/z poles).
-
-Tiles are the outer loop and projections stream innermost
-(output-stationary, the nb -> np limit of the paper's O5: each tile is
-written to the result volume exactly once). The accumulator volume is
-host-resident (numpy) by default so the device never holds more than one
-tile; pass ``out="device"`` to keep it on device.
+Why tiles (unchanged from PR 1)
+-------------------------------
+The pure-JAX ladder materializes full ``(nx, ny, nz)`` temporaries, so
+nothing above toy sizes fits in device memory. The paper's locality
+discipline (§3.1) applied at volume granularity — (i, j)-tiles x Z-slabs
+with *translated* projection matrices (``core.tiling``) — gives every
+registered variant an O(tile) working set (the blocking of Treibig et
+al., arXiv:1104.5243, composed with the iFDK slab scale-out,
+arXiv:1909.02724). The O3 detector-row symmetry pairs voxel ``k`` with
+``nz-1-k`` about the FULL volume's Z midplane, so symmetry variants run
+on mirror-paired slab calls of virtual depth ``2*bk`` (both slabs filled
+by one call — the flop saving survives tiling) and fall back to their
+``KernelSpec.slab_safe_fallback`` on non-pairable slabs.
 
 Usage
 -----
     from repro.runtime.engine import TiledReconstructor
 
     eng = TiledReconstructor(geom, variant="algorithm1_mp",
-                             tile_shape=(64, 64, geom.nz), nb=8)
-    vol = eng.reconstruct(projections)           # filtered FDK, (nz,ny,nx)
+                             tile_shape=(64, 64, geom.nz), nb=8,
+                             proj_batch=32)       # stream 32-proj chunks
+    vol = eng.reconstruct(projections)            # filtered FDK, (nz,ny,nx)
+
+    eng.recon_plan        # the ReconPlan (steps, chunks, program keys)
+    eng.cache_stats()     # jit-program cache hits/misses
 
     # or pick the tile shape from a byte budget:
     eng = TiledReconstructor(geom, memory_budget=64 << 20)
 
     # or via the pipeline entry point:
     from repro.core import fdk_reconstruct
-    vol = fdk_reconstruct(projections, geom, tiling=(64, 64, geom.nz))
+    vol = fdk_reconstruct(projections, geom, tiling=(64, 64, geom.nz),
+                          proj_batch=32)
 
     # cluster scale-out: same tiles, each reconstructed over the mesh
     vol = eng.backproject_distributed(img_t, mats, mesh)
@@ -63,27 +66,26 @@ from __future__ import annotations
 
 from typing import Optional, Sequence, Tuple
 
-import numpy as np
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.geometry import CTGeometry, projection_matrices
-from repro.core.tiling import (
-    TileSpec, ZUnit, make_tiles, pad_projection_batch, pick_tile_shape,
-    plan_z_slabs, plan_z_units, tile_working_set_bytes,
-    translate_matrices,
-)
-from repro.core.variants import get_variant, slab_safe_variant, uses_symmetry
+from repro.core.geometry import CTGeometry
+from repro.core.tiling import TileSpec, make_tiles, plan_z_slabs, \
+    plan_z_units
+from repro.core.variants import get_spec
+from repro.runtime.executor import PlanExecutor, ProgramCache
+from repro.runtime.planner import ReconPlan, plan_reconstruction
 
 
 class TiledReconstructor:
     """Streaming tile/slab back-projection around any registered variant.
 
+    A façade: the constructor builds a :class:`ReconPlan` (all validation
+    happens there) and an executor over the shared program cache.
+
     Parameters
     ----------
     geom : CTGeometry
-    variant : registry name (``core.variants.VARIANTS``).
+    variant : registry name (``core.variants.REGISTRY``).
     tile_shape : (ti, tj, tk) maximum tile size in voxels; ``None`` picks
         it from ``memory_budget`` (or uses the full volume if neither is
         given, which degenerates to the untiled call).
@@ -92,188 +94,88 @@ class TiledReconstructor:
     nb : in-batch projection count handed to the variant (paper O5).
     proj_batch : how many projections stream through per variant call
         (rounded up to a multiple of ``nb``); ``None`` = all at once.
+        With ``reconstruct`` this also bounds the *filtering* working
+        set: each chunk is pre-weighted + ramp-filtered on the fly.
     out : "host" (numpy accumulator, device holds one tile) | "device".
     interpret : forwarded to the Pallas variants.
+    cache : optional private ProgramCache (default: process-shared).
     """
 
     def __init__(self, geom: CTGeometry, variant: str = "algorithm1_mp", *,
                  tile_shape: Optional[Sequence[int]] = None,
                  memory_budget: Optional[int] = None,
                  nb: int = 8, proj_batch: Optional[int] = None,
-                 out: str = "host", interpret: bool = True):
-        if out not in ("host", "device"):
-            raise ValueError(f"out must be 'host' or 'device', got {out!r}")
+                 out: str = "host", interpret: bool = True,
+                 cache: Optional[ProgramCache] = None,
+                 **kernel_options):
         self.geom = geom
         self.variant = variant
-        self.nb = int(nb)
-        self.proj_batch = proj_batch
-        self.out = out
-        self.interpret = interpret
-        tile_given = tile_shape is not None
-        if tile_shape is None:
-            if memory_budget is not None:
-                tile_shape = pick_tile_shape(
-                    geom.volume_shape_xyz, (geom.nw, geom.nh),
-                    int(memory_budget), nb=self.nb,
-                    pair_z=uses_symmetry(variant))
-            else:
-                tile_shape = geom.volume_shape_xyz
-        ti, tj, tk = (int(v) for v in tile_shape)
-        nx, ny, nz = geom.volume_shape_xyz
-        self.tile_shape: Tuple[int, int, int] = (
-            max(1, min(ti, nx)), max(1, min(tj, ny)), max(1, min(tk, nz)))
-        if tile_given and memory_budget is not None and \
-                self.working_set_bytes > int(memory_budget):
-            raise ValueError(
-                f"explicit tile_shape {self.tile_shape} needs "
-                f"{self.working_set_bytes} B, over the memory_budget of "
-                f"{int(memory_budget)} B — drop one of the two or enlarge "
-                f"the budget")
+        self.recon_plan: ReconPlan = plan_reconstruction(
+            geom, variant, tile_shape=tile_shape,
+            memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
+            out=out, interpret=interpret, **kernel_options)
+        self._executor = PlanExecutor(geom, self.recon_plan, cache=cache)
 
     # ---- introspection ---------------------------------------------------
 
     @property
-    def working_set_bytes(self) -> int:
-        """Estimated per-call working set of one tile (the O(tile) bound).
+    def tile_shape(self) -> Tuple[int, int, int]:
+        return self.recon_plan.tile_shape
 
-        Models what actually runs: for symmetry variants a Z-slab of
-        tk < nz is executed as a mirror-paired call of virtual depth
-        2*tk, so that is the depth billed here.
-        """
-        ti, tj, tk = self.tile_shape
-        nz = self.geom.nz
-        if uses_symmetry(self.variant) and tk < nz:
-            tk = min(2 * tk, nz)
-        return tile_working_set_bytes(
-            (ti, tj, tk), (self.geom.nw, self.geom.nh), nb=self.nb)
+    @property
+    def nb(self) -> int:
+        return self.recon_plan.nb
+
+    @property
+    def working_set_bytes(self) -> int:
+        """Peak modeled working set over planned calls (the O(tile) bound;
+        mirror-paired slabs are billed at their virtual 2*bk depth)."""
+        return self.recon_plan.working_set_bytes
+
+    def cache_stats(self) -> dict:
+        """Jit-program cache hits/misses/live-programs."""
+        return self._executor.cache.stats()
 
     def plan(self):
-        """((i0, ni), (j0, nj)) x ZUnit schedule the engine will execute.
+        """Legacy view: ((i0, j0, ni, nj) list, ZUnit list).
 
-        Symmetry variants get the mirror-paired plan (its centered
-        middle slab may be up to 2*tk-1 deep — billed as such by
-        ``working_set_bytes``); symmetry-free variants get plain slabs
-        bounded at tk, since pairing buys them nothing.
+        The authoritative schedule is ``recon_plan.steps`` (which also
+        carries per-step variant resolution); this derived view keeps
+        the PR-1 introspection shape for callers that want the raw
+        (i, j) x Z decomposition.
         """
-        ti, tj, tk = self.tile_shape
+        ti, tj, tk = self.recon_plan.tile_shape
         nx, ny, nz = self.geom.volume_shape_xyz
         ij = [(t.i0, t.j0, t.ni, t.nj)
               for t in make_tiles((nx, ny, 1), (ti, tj, 1))]
-        z = (plan_z_units(nz, tk) if uses_symmetry(self.variant)
+        z = (plan_z_units(nz, tk) if get_spec(self.variant).uses_symmetry
              else plan_z_slabs(nz, tk))
         return ij, z
 
-    # ---- single-tile primitives -----------------------------------------
-
-    def _call_variant(self, name: str, img_t, mats, shape_xyz):
-        """Stream projection batches through one variant call site."""
-        fn = get_variant(name)
-        img_p, mat_p = pad_projection_batch(img_t, mats, self.nb)
-        n_pad = img_p.shape[0]
-        pb = n_pad if self.proj_batch is None else \
-            -(-int(self.proj_batch) // self.nb) * self.nb
-        acc = None
-        for s0 in range(0, n_pad, pb):
-            part = fn(img_p[s0:s0 + pb], mat_p[s0:s0 + pb], shape_xyz,
-                      nb=self.nb, interpret=self.interpret)
-            acc = part if acc is None else acc + part
-        return acc
-
-    def backproject_tile(self, img_t: jnp.ndarray, mats: jnp.ndarray,
-                         tile: TileSpec) -> jnp.ndarray:
-        """Back-project one arbitrary sub-box; exact for every variant.
-
-        Symmetry-carrying variants are used directly when the box is
-        Z-centered (this includes full-Z tiles) and swapped for their
-        slab-safe fallback otherwise.
-        """
-        nz = self.geom.nz
-        centered = (2 * tile.k0 + tile.nk == nz)
-        name = self.variant if centered else slab_safe_variant(self.variant)
-        mats_t = translate_matrices(mats, float(tile.i0), float(tile.j0),
-                                    float(tile.k0))
-        return self._call_variant(name, img_t, mats_t, tile.shape)
-
-    def _run_z_unit(self, img_t, mats, i0, j0, ni, nj, unit: ZUnit):
-        """One ((i,j)-tile, Z-unit) step -> [(k0, tile_volume), ...]."""
-        if unit.paired and uses_symmetry(self.variant):
-            # One symmetry call of virtual depth 2*bk fills BOTH slabs:
-            # local k in [0, bk) is the direct half at k0 and [bk, 2bk)
-            # is the O3 mirror, i.e. the slab at nz-k0-bk (see ZUnit).
-            mats_t = translate_matrices(mats, float(i0), float(j0),
-                                        float(unit.k0))
-            both = self._call_variant(self.variant, img_t, mats_t,
-                                      (ni, nj, 2 * unit.nk))
-            return [(unit.k0, both[..., :unit.nk]),
-                    (unit.mirror_k0, both[..., unit.nk:])]
-        pieces = []
-        slabs = [(unit.k0, unit.nk)]
-        if unit.paired:
-            slabs.append((unit.mirror_k0, unit.nk))
-        for k0, bk in slabs:
-            pieces.append((k0, self.backproject_tile(
-                img_t, mats, TileSpec(i0, j0, k0, ni, nj, bk))))
-        return pieces
-
-    # ---- full-volume drivers --------------------------------------------
-
-    def _alloc(self):
-        shape = self.geom.volume_shape_xyz
-        return (np.zeros(shape, np.float32) if self.out == "host"
-                else jnp.zeros(shape, jnp.float32))
-
-    # out="device" placement: donated dynamic_update_slice so each tile
-    # updates the volume buffer in place — NOT vol.at[].set outside jit,
-    # which would copy the full volume once per tile.
-    _place_device = staticmethod(jax.jit(
-        lambda vol, tile, idx: jax.lax.dynamic_update_slice(
-            vol, tile, (idx[0], idx[1], idx[2])),
-        donate_argnums=0))
-
-    def _place(self, vol, i0, j0, k0, tile_vol):
-        ni, nj, nk = tile_vol.shape
-        if self.out == "host":
-            vol[i0:i0 + ni, j0:j0 + nj, k0:k0 + nk] = np.asarray(tile_vol)
-            return vol
-        idx = jnp.asarray([i0, j0, k0], jnp.int32)
-        return self._place_device(vol, jnp.asarray(tile_vol), idx)
+    # ---- execution (delegates to the PlanExecutor) -----------------------
 
     def backproject(self, img_t: jnp.ndarray, mats: jnp.ndarray):
-        """Full tiled back-projection.
+        """Full tiled back-projection of pre-filtered projections.
 
         img_t: (np, nw, nh) transposed projections; mats: (np, 3, 4).
         Returns vol_t (nx, ny, nz) — numpy when ``out == "host"``.
         """
-        # pad the tail batch ONCE; the per-call pad in _call_variant then
-        # short-circuits (it is a no-op on already-divisible inputs)
-        img_t, mats = pad_projection_batch(img_t, mats, self.nb)
-        vol = self._alloc()
-        ij, z_units = self.plan()
-        for (i0, j0, ni, nj) in ij:
-            for unit in z_units:
-                for k0, piece in self._run_z_unit(img_t, mats, i0, j0,
-                                                  ni, nj, unit):
-                    vol = self._place(vol, i0, j0, k0, piece)
-        return vol
+        return self._executor.backproject(img_t, mats)
+
+    def backproject_tile(self, img_t: jnp.ndarray, mats: jnp.ndarray,
+                         tile: TileSpec) -> jnp.ndarray:
+        """Back-project one arbitrary sub-box; exact for every variant
+        (non-centered boxes run the KernelSpec slab-safe fallback)."""
+        return self._executor.backproject_tile(img_t, mats, tile)
 
     def reconstruct(self, projections: jnp.ndarray) -> jnp.ndarray:
-        """Filtered FDK through the tiled engine: (np, nh, nw) -> (nz, ny, nx).
+        """Filtered FDK through the plan: (np, nh, nw) -> (nz, ny, nx).
 
-        Returns numpy when ``out == "host"`` (a free transposed view of
-        the host accumulator) and a jax array otherwise.
+        Filtering streams through the projection-chunk loop; returns
+        numpy when ``out == "host"`` (a free transposed view of the host
+        accumulator) and a jax array otherwise.
         """
-        from repro.core import backproject as bp
-        from repro.core.filtering import fdk_preweight_and_filter
-
-        filtered = fdk_preweight_and_filter(projections, self.geom)
-        img_t = bp.transpose_projections(filtered)
-        mats = projection_matrices(self.geom)
-        vol_t = self.backproject(img_t, mats)
-        if isinstance(vol_t, np.ndarray):
-            # out="host": the accumulator may exceed device memory —
-            # transpose is a free numpy view, never round-trip it
-            return np.transpose(vol_t, (2, 1, 0))
-        return bp.volume_to_native(vol_t)
+        return self._executor.reconstruct(projections)
 
     # ---- cluster composition (iFDK scale-out x tiles) --------------------
 
@@ -283,32 +185,17 @@ class TiledReconstructor:
         """Compose tiles with the data/model/pod mesh of core.distributed.
 
         Each (i, j)-tile (full Z — the mesh shards i/j, slabs stay whole)
-        is reconstructed by the existing shard_map program with the tile
-        origin folded into every device's slab offset; projection batches
-        stream through with tail padding. The origin is a call-time
-        argument, so ONE program is built (and traced) per distinct tile
-        shape — interior tiles all share it; only edge-tile shapes add
-        programs. Returns vol_t (nx, ny, nz) on host.
+        runs the shard_map program with the tile origin as a call-time
+        argument: ONE cached program per distinct tile shape. Projection
+        batches follow the plan's chunk schedule (tail padded). Returns
+        vol_t (nx, ny, nz) on host.
         """
-        from repro.core.distributed import make_distributed_bp
-
-        nb = self.nb if nb is None else int(nb)
-        img_p, mat_p = pad_projection_batch(img_t, mats, nb)
-        n_pad = img_p.shape[0]
-        ti, tj, _ = self.tile_shape
-        nx, ny, nz = self.geom.volume_shape_xyz
-        vol = np.zeros((nx, ny, nz), np.float32)
-        programs = {}
-        for tile in make_tiles((nx, ny, nz), (ti, tj, nz)):
-            if tile.shape not in programs:
-                programs[tile.shape], _specs = make_distributed_bp(
-                    self.geom, mesh, nb=nb, variant=dist_variant,
-                    vol_shape_xyz=tile.shape)
-            fn = programs[tile.shape]
-            origin = jnp.asarray([tile.i0, tile.j0], jnp.float32)
-            acc = None
-            for s0 in range(0, n_pad, nb):
-                part = fn(img_p[s0:s0 + nb], mat_p[s0:s0 + nb], origin)
-                acc = part if acc is None else acc + part
-            vol[tile.slices] = np.asarray(acc)[:tile.ni, :tile.nj]
-        return vol
+        nb = self.recon_plan.nb if nb is None else int(nb)
+        # the mesh program consumes exactly-nb batches: plan chunks at nb
+        plan = plan_reconstruction(
+            self.geom, self.variant, tile_shape=self.recon_plan.tile_shape,
+            nb=nb, proj_batch=nb, out="host",
+            interpret=self.recon_plan.interpret)
+        ex = PlanExecutor(self.geom, plan, cache=self._executor.cache)
+        return ex.execute_distributed(img_t, mats, mesh,
+                                      dist_variant=dist_variant)

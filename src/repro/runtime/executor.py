@@ -1,0 +1,365 @@
+"""Compile + execute stages of the plan/compile/execute architecture.
+
+``runtime.planner`` produces a pure :class:`~repro.runtime.planner.ReconPlan`;
+this module turns it into arrays:
+
+  * :class:`ProgramCache` — the **compile** stage. One jitted program per
+    ``(variant, call_shape, nb, dtype, interpret, options)`` key, shared
+    by the tiled, untiled, and distributed executors: interior tiles of
+    equal shape and repeated ``reconstruct`` calls reuse the same
+    program instead of retracing. Hits/misses are introspectable
+    (``cache.stats()``), and a module-level default cache persists across
+    executors so repeated façade calls stay warm.
+
+  * :class:`PlanExecutor` — the **execute** stage. Walks the plan's
+    projection-chunk x tile-step schedule. ``reconstruct`` fuses FDK
+    pre-weighting + ramp filtering INTO the projection-chunk loop
+    (``core.filtering.fdk_filter_chunk``), so filtered projections are
+    never materialized whole — projections, like the volume, stream
+    through a bounded working set. Host placement is double-buffered:
+    the ``np.asarray`` device->host copy of tile ``n`` is issued only
+    after tile ``n+1``'s back-projection has been dispatched, so the
+    copy overlaps compute under JAX's async dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backproject as bp
+from repro.core.filtering import fdk_filter_chunk
+from repro.core.geometry import CTGeometry, projection_matrices
+from repro.core.tiling import (
+    TileSpec, make_tiles, pad_projection_batch, plan_proj_chunks,
+    translate_matrices,
+)
+from repro.core.variants import get_spec
+from repro.runtime.planner import PlanStep, ReconPlan, resolve_tile_variant
+
+
+# --------------------------------------------------------------------------
+# Compile: the keyed jit-program cache
+# --------------------------------------------------------------------------
+
+class ProgramCache:
+    """Keyed cache of jitted back-projection programs.
+
+    Kernel programs are keyed ``(variant, call_shape, nb, dtype,
+    interpret, options)``; the distributed executor stores its shard_map
+    programs under its own key family via :meth:`get_or_build`. The
+    cache is thread-safe and introspectable: ``stats()`` reports hits,
+    misses (== programs built), and the live key count.
+    """
+
+    def __init__(self):
+        self._programs: Dict[tuple, Callable] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(self, key: tuple, builder: Callable[[], Callable]):
+        with self._lock:
+            prog = self._programs.get(key)
+            if prog is not None:
+                self.hits += 1
+                return prog
+        # build outside the lock (tracing can be slow); last writer wins
+        prog = builder()
+        with self._lock:
+            self._programs.setdefault(key, prog)
+            self.misses += 1
+            return self._programs[key]
+
+    def program(self, variant: str, call_shape: Tuple[int, int, int],
+                nb: int, dtype: str, interpret: bool,
+                options: Tuple = ()) -> Callable:
+        """Jitted ``prog(img_t_chunk, mats_chunk) -> vol_t(call_shape)``."""
+        key = ("kernel", variant, tuple(call_shape), int(nb), str(dtype),
+               bool(interpret), tuple(options))
+
+        def build():
+            spec = get_spec(variant)
+            opts = spec.resolve_options(
+                {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
+            shape = tuple(call_shape)
+            fn = spec.fn
+            prog = lambda img, mat: fn(img, mat, shape, **opts)  # noqa: E731
+            # non-jittable kernels (KernelSpec.jittable=False) inspect
+            # concrete values at trace time; cache them un-wrapped
+            return jax.jit(prog) if spec.jittable else prog
+
+        return self.get_or_build(key, build)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "programs": len(self._programs)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._programs.clear()
+            self.hits = self.misses = 0
+
+
+_DEFAULT_CACHE = ProgramCache()
+
+
+def default_program_cache() -> ProgramCache:
+    """The process-wide cache shared by every executor (and façade)."""
+    return _DEFAULT_CACHE
+
+
+# --------------------------------------------------------------------------
+# Execute: placement primitives
+# --------------------------------------------------------------------------
+
+# out="device" placement: donated dynamic read-add-update so each tile
+# accumulates into the volume buffer in place — NOT vol.at[].add outside
+# jit, which would copy the full volume once per tile.
+@functools.partial(jax.jit, donate_argnums=0)
+def _place_device_add(vol, tile, idx):
+    org = (idx[0], idx[1], idx[2])
+    cur = jax.lax.dynamic_slice(vol, org, tile.shape)
+    return jax.lax.dynamic_update_slice(vol, cur + tile, org)
+
+
+def _pad_mats(mats: jnp.ndarray, n_pad: int) -> jnp.ndarray:
+    """Pad (np, 3, 4) matrices to n_pad rows by repeating the last one
+    (a valid geometry: no 1/z poles — pairs with zero-image padding)."""
+    pad = int(n_pad) - mats.shape[0]
+    if pad <= 0:
+        return mats
+    return jnp.concatenate(
+        [mats, jnp.broadcast_to(mats[-1:], (pad, 3, 4))], axis=0)
+
+
+class PlanExecutor:
+    """Executes a :class:`ReconPlan` against projection data.
+
+    One executor serves any number of calls; programs come from the
+    (shared) :class:`ProgramCache`, so repeated calls and same-shape
+    tiles never retrace.
+    """
+
+    def __init__(self, geom: CTGeometry, plan: ReconPlan,
+                 cache: Optional[ProgramCache] = None):
+        self.geom = geom
+        self.plan = plan
+        self.cache = cache if cache is not None else default_program_cache()
+
+    # ---- compile-stage access -------------------------------------------
+
+    def _program(self, variant: str, call_shape) -> Callable:
+        return self.cache.program(variant, call_shape, self.plan.nb,
+                                  "float32", self.plan.interpret,
+                                  self.plan.options)
+
+    def warm(self) -> Dict[str, int]:
+        """Compile every distinct program the plan needs; return stats."""
+        for variant, shape in self.plan.program_keys:
+            self._program(variant, shape)
+        return self.cache.stats()
+
+    # ---- execute-stage helpers ------------------------------------------
+
+    def _alloc(self):
+        shape = self.plan.vol_shape_xyz
+        return (np.zeros(shape, np.float32) if self.plan.out == "host"
+                else jnp.zeros(shape, jnp.float32))
+
+    @staticmethod
+    def _translated(mats: jnp.ndarray, step: PlanStep) -> jnp.ndarray:
+        if (step.i0, step.j0, step.k_off) == (0, 0, 0):
+            return mats
+        return translate_matrices(mats, float(step.i0), float(step.j0),
+                                  float(step.k_off))
+
+    def _chunks_for(self, n_padded: int):
+        """Chunk schedule for the ACTUAL (padded) projection count.
+
+        ``backproject`` accepts any (np, nw, nh) input, not just
+        ``geom.n_proj`` views (the plan's count): the plan contributes
+        the streaming *policy* (chunk size, or all-at-once), the data
+        contributes the extent."""
+        plan = self.plan
+        _, _, chunks = plan_proj_chunks(
+            n_padded, plan.nb,
+            plan.chunk_size if plan.streams_projections else None)
+        return chunks
+
+    def _single_full_call(self) -> bool:
+        """One unpaired step covering the whole volume (the untiled plan)."""
+        steps = self.plan.steps
+        return (len(steps) == 1 and not steps[0].paired
+                and steps[0].call_shape == self.plan.vol_shape_xyz
+                and (steps[0].i0, steps[0].j0, steps[0].k_off) == (0, 0, 0))
+
+    def _backproject_chunk(self, vol, img_c: jnp.ndarray,
+                           mat_c: jnp.ndarray):
+        """Accumulate one projection chunk into the volume, all steps."""
+        plan = self.plan
+        host = plan.out == "host"
+        pending = ()   # previous step's (slices, device piece) writes
+        for step in plan.steps:
+            prog = self._program(step.variant, step.call_shape)
+            out = prog(img_c, self._translated(mat_c, step))
+            isl = slice(step.i0, step.i0 + step.ni)
+            jsl = slice(step.j0, step.j0 + step.nj)
+            cur = tuple(((isl, jsl, slice(w.k0, w.k0 + w.nk)),
+                         out[..., w.lo:w.hi]) for w in step.writes)
+            if host:
+                # double buffer: flush step n-1's device->host copies
+                # only after step n's programs are dispatched, so the
+                # copy overlaps compute (async dispatch)
+                for sl, piece in pending:
+                    vol[sl] += np.asarray(piece)
+                pending = cur
+            else:
+                for (i_s, j_s, k_s), piece in cur:
+                    idx = jnp.asarray([i_s.start, j_s.start, k_s.start],
+                                      jnp.int32)
+                    vol = _place_device_add(vol, piece, idx)
+        for sl, piece in pending:
+            vol[sl] += np.asarray(piece)
+        return vol
+
+    # ---- full-volume drivers --------------------------------------------
+
+    def backproject(self, img_t: jnp.ndarray, mats: jnp.ndarray):
+        """Back-project pre-filtered transposed projections.
+
+        img_t: (np, nw, nh); mats: (np, 3, 4). Returns vol_t (nx, ny, nz)
+        — numpy when ``plan.out == "host"``. The tail batch is padded
+        ONCE here (the plan's padded count); no per-call re-padding.
+        """
+        plan = self.plan
+        img_p, mat_p = pad_projection_batch(img_t, mats, plan.nb)
+        chunks = self._chunks_for(img_p.shape[0])
+        if self._single_full_call() and plan.out == "device":
+            step = plan.steps[0]
+            prog = self._program(step.variant, step.call_shape)
+            acc = None
+            for s0, s1 in chunks:
+                part = prog(img_p[s0:s1], mat_p[s0:s1])
+                acc = part if acc is None else acc + part
+            return acc
+        vol = self._alloc()
+        for s0, s1 in chunks:
+            vol = self._backproject_chunk(vol, img_p[s0:s1], mat_p[s0:s1])
+        return vol
+
+    def backproject_tile(self, img_t: jnp.ndarray, mats: jnp.ndarray,
+                         tile: TileSpec) -> jnp.ndarray:
+        """Back-project one arbitrary sub-box; exact for every variant
+        (slab-safe fallback resolved here for non-centered boxes)."""
+        plan = self.plan
+        name = resolve_tile_variant(plan.variant, tile, plan.vol_shape_xyz[2])
+        prog = self._program(name, tile.shape)
+        img_p, mat_p = pad_projection_batch(img_t, mats, plan.nb)
+        mat_p = translate_matrices(mat_p, float(tile.i0), float(tile.j0),
+                                   float(tile.k0))
+        acc = None
+        for s0, s1 in self._chunks_for(img_p.shape[0]):
+            part = prog(img_p[s0:s1], mat_p[s0:s1])
+            acc = part if acc is None else acc + part
+        return acc
+
+    # ---- streamed filtered reconstruction --------------------------------
+
+    def _chunk_inputs(self, projections: jnp.ndarray, mat_p: jnp.ndarray,
+                      s0: int, s1: int):
+        """Filter + transpose the raw rows of one padded chunk [s0, s1)."""
+        plan = self.plan
+        raw = projections[s0:min(s1, plan.n_proj)]
+        img_c = bp.transpose_projections(
+            fdk_filter_chunk(raw, self.geom, plan.n_proj))
+        pad = (s1 - s0) - img_c.shape[0]
+        if pad > 0:   # tail chunk: zero images pair with repeated matrices
+            img_c = jnp.concatenate(
+                [img_c, jnp.zeros((pad,) + img_c.shape[1:], img_c.dtype)],
+                axis=0)
+        return img_c, mat_p[s0:s1]
+
+    def reconstruct(self, projections: jnp.ndarray):
+        """Filtered FDK: (np, nh, nw) raw -> (nz, ny, nx) volume.
+
+        Pre-weighting + ramp filtering run inside the projection-chunk
+        loop — with ``plan.streams_projections`` the filtered set is
+        never whole in memory. Returns numpy when ``plan.out == "host"``
+        (a free transposed view of the host accumulator).
+        """
+        plan = self.plan
+        if projections.shape[0] != plan.n_proj:
+            raise ValueError(
+                f"reconstruct expects the geometry's full scan of "
+                f"{plan.n_proj} projections (the FDK angular weighting "
+                f"assumes it), got {projections.shape[0]}; for arbitrary "
+                f"view subsets filter upstream and call backproject()")
+        mat_p = _pad_mats(projection_matrices(self.geom),
+                          plan.n_proj_padded)
+        if self._single_full_call() and plan.out == "device":
+            step = plan.steps[0]
+            prog = self._program(step.variant, step.call_shape)
+            acc = None
+            for s0, s1 in plan.chunks:
+                img_c, mat_c = self._chunk_inputs(projections, mat_p, s0, s1)
+                part = prog(img_c, mat_c)
+                acc = part if acc is None else acc + part
+            return bp.volume_to_native(acc)
+        vol = self._alloc()
+        for s0, s1 in plan.chunks:
+            img_c, mat_c = self._chunk_inputs(projections, mat_p, s0, s1)
+            vol = self._backproject_chunk(vol, img_c, mat_c)
+        if isinstance(vol, np.ndarray):
+            # out="host": the accumulator may exceed device memory —
+            # transpose is a free numpy view, never round-trip it
+            return np.transpose(vol, (2, 1, 0))
+        return bp.volume_to_native(vol)
+
+    # ---- cluster composition (iFDK scale-out x tiles) --------------------
+
+    def execute_distributed(self, img_t: jnp.ndarray, mats: jnp.ndarray,
+                            mesh, *, dist_variant: str = "scan"):
+        """Compose (i, j)-tiles with the data/model/pod mesh.
+
+        Each full-Z tile is reconstructed by a shard_map program from
+        ``core.distributed.make_distributed_bp`` with the tile origin as
+        a call-time argument — ONE program per distinct tile shape,
+        cached in the shared ProgramCache, so interior tiles and
+        repeated calls reuse it. Projection chunks follow the plan's
+        schedule. Returns vol_t (nx, ny, nz) on host.
+        """
+        from repro.core.distributed import make_distributed_bp
+
+        plan = self.plan
+        nb = plan.nb
+        img_p, mat_p = pad_projection_batch(img_t, mats, nb)
+        # the shard_map program consumes exactly-nb batches: chunk the
+        # ACTUAL padded extent by nb (any view count streams through)
+        _, _, chunks = plan_proj_chunks(img_p.shape[0], nb, nb)
+        nx, ny, nz = plan.vol_shape_xyz
+        ti, tj, _ = plan.tile_shape
+        vol = np.zeros((nx, ny, nz), np.float32)
+        for tile in make_tiles((nx, ny, nz), (ti, tj, nz)):
+            # geom and mesh are both hashable (frozen dataclass / jax
+            # Mesh): keying on their VALUES makes equal setups share the
+            # program and distinct geometries never collide
+            key = ("dist", dist_variant, tile.shape, nb, self.geom, mesh)
+            prog = self.cache.get_or_build(
+                key, lambda shape=tile.shape: make_distributed_bp(
+                    self.geom, mesh, nb=nb, variant=dist_variant,
+                    vol_shape_xyz=shape)[0])
+            origin = jnp.asarray([tile.i0, tile.j0], jnp.float32)
+            acc = None
+            for s0, s1 in chunks:
+                part = prog(img_p[s0:s1], mat_p[s0:s1], origin)
+                acc = part if acc is None else acc + part
+            vol[tile.slices] = np.asarray(acc)[:tile.ni, :tile.nj]
+        return vol

@@ -1,0 +1,273 @@
+"""Reconstruction planning: a pure, declarative schedule for any entry point.
+
+This is stage 1 of the repo's plan/compile/execute architecture
+(docs/ARCHITECTURE.md). A :class:`ReconPlan` is built once from geometry +
+request parameters by :func:`plan_reconstruction` — with **no** array data
+and **no** jax in the loop — and then consumed by ``runtime.executor``:
+
+    plan     runtime.planner.plan_reconstruction  (this module, pure)
+    compile  runtime.executor.ProgramCache        (keyed jit programs)
+    execute  runtime.executor.PlanExecutor        (streaming loops)
+
+The plan owns every scheduling decision the paper ties performance to:
+
+  * the (i, j)-tile x Z-slab decomposition, with the O3 mirror-pair
+    schedule for symmetry-carrying variants (``core.tiling.plan_z_units``)
+    and depth-bounded plain slabs for symmetry-free ones;
+  * per-step variant resolution: a Z-slab that is neither volume-centered
+    nor mirror-paired runs the variant's declarative
+    ``KernelSpec.slab_safe_fallback`` instead (``core.variants.REGISTRY``);
+  * per-step matrix translation offsets (``core.tiling.translate_matrices``
+    folds the sub-box origin into the constant column, so the kernels run
+    unchanged);
+  * the projection-chunk schedule: chunk bounds over the *padded*
+    projection count (tail batches padded to a multiple of ``nb`` with
+    zero images + repeated matrices — exactly zero contribution), which
+    is what lets the executor stream pre-weighting + ramp filtering
+    through the chunk loop instead of filtering the whole set up front;
+  * option validation, in ONE place, for every façade
+    (``fdk_reconstruct``, ``sart_step``, ``TiledReconstructor``,
+    ``backproject_distributed``).
+
+Because planning is pure, every scheduling invariant is unit-testable
+without touching arrays (tests/test_planner.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.geometry import CTGeometry
+from repro.core.tiling import (
+    TileSpec, make_tiles, pick_tile_shape, plan_proj_chunks, plan_z_slabs,
+    plan_z_units, tile_working_set_bytes,
+)
+from repro.core.variants import KernelSpec, get_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class TileWrite:
+    """How one contiguous Z-range of a kernel call's output lands in the
+    volume: ``out[..., lo:hi]`` is written at global Z origin ``k0``."""
+
+    k0: int
+    lo: int
+    hi: int
+
+    @property
+    def nk(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    """One kernel invocation: a sub-box call plus its volume writes.
+
+    A mirror-paired step calls the (symmetry-carrying) kernel once with
+    virtual depth ``2*nk`` and scatters the two halves to the slab and
+    its O3 mirror — two :class:`TileWrite` entries. Plain steps have one.
+    ``variant`` is already resolved (slab-safe fallback applied), so the
+    executor never consults the registry for scheduling decisions.
+    """
+
+    i0: int
+    j0: int
+    ni: int
+    nj: int
+    k_off: int                      # Z translation folded into the matrices
+    call_nk: int                    # Z extent of the kernel call
+    variant: str                    # resolved kernel name
+    writes: Tuple[TileWrite, ...]
+
+    @property
+    def call_shape(self) -> Tuple[int, int, int]:
+        return (self.ni, self.nj, self.call_nk)
+
+    @property
+    def paired(self) -> bool:
+        return len(self.writes) > 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconPlan:
+    """Complete, immutable schedule for one reconstruction.
+
+    ``steps`` covers the volume disjointly via their writes; ``chunks``
+    covers ``[0, n_proj_padded)`` disjointly. ``options`` holds the
+    validated extra kernel options (already filtered to what the
+    requested variant's KernelSpec accepts).
+    """
+
+    vol_shape_xyz: Tuple[int, int, int]
+    det_shape_wh: Tuple[int, int]
+    variant: str
+    tile_shape: Tuple[int, int, int]
+    nb: int
+    n_proj: int
+    n_proj_padded: int
+    chunk_size: int                       # projections per chunk (nb-multiple)
+    out: str                              # "host" | "device"
+    interpret: bool
+    steps: Tuple[PlanStep, ...]
+    options: Tuple[Tuple[str, object], ...] = ()
+
+    # ---- derived schedules / introspection --------------------------------
+
+    @property
+    def chunks(self) -> Tuple[Tuple[int, int], ...]:
+        """[s0, s1) projection-chunk bounds over the padded count."""
+        _, _, chunks = plan_proj_chunks(self.n_proj_padded, self.nb,
+                                        self.chunk_size)
+        return tuple(chunks)
+
+    @property
+    def streams_projections(self) -> bool:
+        """Whether more than one chunk flows through the executor."""
+        return self.chunk_size < self.n_proj_padded
+
+    @property
+    def program_keys(self) -> Tuple[Tuple[str, Tuple[int, int, int]], ...]:
+        """Distinct (variant, call_shape) pairs — the compile workload.
+
+        Interior tiles share shapes, so this is typically much smaller
+        than ``len(steps)``: the program cache compiles each key once.
+        """
+        seen: Dict[Tuple[str, Tuple[int, int, int]], None] = {}
+        for s in self.steps:
+            seen.setdefault((s.variant, s.call_shape))
+        return tuple(seen)
+
+    @property
+    def working_set_bytes(self) -> int:
+        """Peak modeled working set over all planned kernel calls."""
+        return max(tile_working_set_bytes(
+            s.call_shape, self.det_shape_wh, nb=self.nb)
+            for s in self.steps)
+
+    def kernel_options(self) -> Dict:
+        return dict(self.options)
+
+
+# --------------------------------------------------------------------------
+# Per-tile variant resolution (shared with the single-tile façade)
+# --------------------------------------------------------------------------
+
+def resolve_tile_variant(variant: str, tile: TileSpec, nz: int) -> str:
+    """Kernel to run on one arbitrary sub-box: the requested variant when
+    the box is Z-centered on the volume midplane (symmetry exact), its
+    declarative slab-safe fallback otherwise."""
+    spec = get_spec(variant)
+    if not spec.uses_symmetry or 2 * tile.k0 + tile.nk == nz:
+        return variant
+    return spec.slab_safe_fallback
+
+
+# --------------------------------------------------------------------------
+# The planner
+# --------------------------------------------------------------------------
+
+def _plan_steps(vol_shape_xyz: Tuple[int, int, int],
+                tile_shape: Tuple[int, int, int],
+                spec: KernelSpec) -> Tuple[PlanStep, ...]:
+    """Tile/slab schedule with per-step variant resolution.
+
+    Symmetry variants get the mirror-paired Z schedule (one call of
+    virtual depth 2*nk fills both slabs — the O3 flop saving survives
+    tiling; the centered middle slab may be up to 2*tk-1 deep). Symmetry-
+    free variants get plain slabs bounded at tk, since pairing buys them
+    nothing.
+    """
+    nx, ny, nz = vol_shape_xyz
+    ti, tj, tk = tile_shape
+    z_units = (plan_z_units(nz, tk) if spec.uses_symmetry
+               else plan_z_slabs(nz, tk))
+    steps = []
+    for t in make_tiles((nx, ny, 1), (ti, tj, 1)):
+        for u in z_units:
+            if u.paired and spec.uses_symmetry:
+                steps.append(PlanStep(
+                    t.i0, t.j0, t.ni, t.nj, k_off=u.k0, call_nk=2 * u.nk,
+                    variant=spec.name,
+                    writes=(TileWrite(u.k0, 0, u.nk),
+                            TileWrite(u.mirror_k0, u.nk, 2 * u.nk))))
+            else:
+                sub = TileSpec(t.i0, t.j0, u.k0, t.ni, t.nj, u.nk)
+                steps.append(PlanStep(
+                    t.i0, t.j0, t.ni, t.nj, k_off=u.k0, call_nk=u.nk,
+                    variant=resolve_tile_variant(spec.name, sub, nz),
+                    writes=(TileWrite(u.k0, 0, u.nk),)))
+    return tuple(steps)
+
+
+def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
+                        tile_shape: Optional[Sequence[int]] = None,
+                        memory_budget: Optional[int] = None,
+                        nb: int = 8,
+                        proj_batch: Optional[int] = None,
+                        out: str = "host",
+                        interpret: bool = True,
+                        **kernel_options) -> ReconPlan:
+    """Build the :class:`ReconPlan` every entry point executes.
+
+    Parameters mirror the façades; validation for ALL of them lives here:
+
+    tile_shape : (ti, tj, tk) max tile size; ``None`` picks it from
+        ``memory_budget``, or uses the full volume if neither is given
+        (the untiled plan: one step, one chunk — exactly the seed path).
+    memory_budget : byte budget for one call's working set. Combined with
+        an explicit ``tile_shape`` it validates instead of picking.
+    nb : in-batch projection count (paper O5); must be >= 1.
+    proj_batch : projections streamed per kernel call, rounded UP to a
+        multiple of ``nb``; ``None`` = all at once (a single chunk).
+    out : "host" (numpy accumulator, device holds one tile) | "device".
+    interpret : forwarded to Pallas variants (CPU CI runs interpret=True).
+    kernel_options : extra per-variant knobs (e.g. ``block=``, ``bw=``),
+        validated against the variant's ``KernelSpec.options``.
+    """
+    spec = get_spec(variant)
+    if out not in ("host", "device"):
+        raise ValueError(f"out must be 'host' or 'device', got {out!r}")
+    nb = int(nb)
+    if nb < 1:
+        raise ValueError(f"nb must be >= 1, got {nb}")
+
+    unknown = set(kernel_options) - set(spec.options) - {"nb", "interpret"}
+    if unknown:
+        raise ValueError(
+            f"variant {variant!r} does not accept option(s) "
+            f"{sorted(unknown)}; its KernelSpec allows "
+            f"{sorted(spec.options)}")
+
+    nx, ny, nz = geom.volume_shape_xyz
+    tile_given = tile_shape is not None
+    if tile_shape is None:
+        if memory_budget is not None:
+            tile_shape = pick_tile_shape(
+                (nx, ny, nz), (geom.nw, geom.nh), int(memory_budget),
+                nb=nb, pair_z=spec.uses_symmetry)
+        else:
+            tile_shape = (nx, ny, nz)
+    ti, tj, tk = (int(v) for v in tile_shape)
+    tile = (max(1, min(ti, nx)), max(1, min(tj, ny)), max(1, min(tk, nz)))
+
+    steps = _plan_steps((nx, ny, nz), tile, spec)
+
+    n_proj = int(geom.n_proj)
+    n_pad, chunk, _ = plan_proj_chunks(n_proj, nb, proj_batch)
+
+    plan = ReconPlan(
+        vol_shape_xyz=(nx, ny, nz), det_shape_wh=(geom.nw, geom.nh),
+        variant=variant, tile_shape=tile, nb=nb,
+        n_proj=n_proj, n_proj_padded=n_pad, chunk_size=chunk,
+        out=out, interpret=interpret, steps=steps,
+        options=tuple(sorted(spec.resolve_options(kernel_options).items())))
+
+    if tile_given and memory_budget is not None and \
+            plan.working_set_bytes > int(memory_budget):
+        raise ValueError(
+            f"explicit tile_shape {tile} needs "
+            f"{plan.working_set_bytes} B, over the memory_budget of "
+            f"{int(memory_budget)} B — drop one of the two or enlarge "
+            f"the budget")
+    return plan

@@ -1,17 +1,20 @@
 #!/usr/bin/env bash
-# Tier-1 gate. Two stages:
+# Tier-1 gate. Three stages:
 #
 #   1. collection smoke — EVERY test module must collect (a missing
 #      optional dependency may skip a module, but an ImportError at
 #      collection time must fail the gate, never silently shrink it);
-#   2. the exact tier-1 command from ROADMAP.md.
+#   2. the exact tier-1 command from ROADMAP.md;
+#   3. NON-GATING perf smoke — `make bench-smoke` writes the
+#      BENCH_PR2.json perf-trajectory snapshot; a failure is reported
+#      but never fails the gate.
 #
 # Usage: tests/run_tier1.sh  (or `make tier1` from the repo root)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 stage 1/2: collection smoke =="
+echo "== tier-1 stage 1/3: collection smoke =="
 # --co exits non-zero on any collection error; -m "" disables the
 # default "not slow" filter so even deselected modules must import.
 python -m pytest -q --co -m "" >/dev/null || {
@@ -20,5 +23,9 @@ python -m pytest -q --co -m "" >/dev/null || {
     exit 1
 }
 
-echo "== tier-1 stage 2/2: pytest -x -q =="
-exec python -m pytest -x -q "$@"
+echo "== tier-1 stage 2/3: pytest -x -q =="
+python -m pytest -x -q "$@"
+
+echo "== tier-1 stage 3/3: perf smoke (non-gating) =="
+python -m benchmarks.bench_smoke --json BENCH_PR2.json || \
+    echo "WARNING: bench-smoke failed (non-gating); see output above." >&2
