@@ -17,4 +17,5 @@ bench-tiled:
 	$(PY) -m benchmarks.bench_tiled
 
 bench-smoke:                   # perf-trajectory snapshot (non-gating)
-	$(PY) -m benchmarks.bench_smoke --json BENCH_PR2.json
+	$(PY) -m benchmarks.bench_smoke --json BENCH_PR3.json \
+		--diff auto --warn-regress 0.25

@@ -90,3 +90,68 @@ def write_json(path: str, meta: Optional[Dict] = None) -> None:
         json.dump(doc, f, indent=2)
         f.write("\n")
     print(f"# wrote {len(doc['records'])} records -> {path}")
+
+
+# ---- trajectory diff ------------------------------------------------------
+
+def load_json(path: str) -> Dict:
+    """Load a prior perf-trajectory JSON (the BENCH_*.json files)."""
+    with open(path) as f:
+        return json.load(f)
+
+
+def diff_records(prior: Dict, current: Optional[List[Dict]] = None
+                 ) -> List[Dict]:
+    """Per-name wall/GUPS deltas of ``current`` rows vs a prior doc.
+
+    Rows are matched by name; only names present in BOTH runs are
+    compared (renamed/new suites simply drop out). Returns one dict per
+    shared row with ``wall_ratio = now / prev`` (< 1 is faster).
+    """
+    cur = {r["name"]: r for r in
+           (records() if current is None else current)}
+    prev = {r["name"]: r for r in prior.get("records", [])}
+    out = []
+    for name, row in cur.items():
+        if name not in prev:
+            continue
+        us_prev = float(prev[name]["us_per_call"])
+        us_now = float(row["us_per_call"])
+        out.append({
+            "name": name,
+            "us_prev": us_prev,
+            "us_now": us_now,
+            "wall_ratio": us_now / us_prev if us_prev else float("inf"),
+            "gups_prev": prev[name].get("metrics", {}).get("gups"),
+            "gups_now": row.get("metrics", {}).get("gups"),
+        })
+    return out
+
+
+def print_diff(prior: Dict, current: Optional[List[Dict]] = None,
+               warn_regress: Optional[float] = None) -> List[Dict]:
+    """Print the per-variant trajectory diff; return regressed rows.
+
+    ``warn_regress``: warn — loudly, but WITHOUT failing — about any row
+    whose wall time regressed by more than that fraction (0.25 = 25%).
+    Perf is a non-gating tier-1 stage: regressions must be impossible to
+    miss in the log yet never turn the build red (tests/run_tier1.sh).
+    """
+    rows = diff_records(prior, current)
+    stamp = prior.get("meta", {}).get("timestamp", "?")
+    print(f"# --- diff vs prior run of {stamp} ({len(rows)} shared rows) ---")
+    print("# name,us_prev,us_now,wall_ratio,gups_prev,gups_now")
+    for r in rows:
+        print(f"{r['name']},{r['us_prev']:.1f},{r['us_now']:.1f},"
+              f"{r['wall_ratio']:.2f}x,{r['gups_prev']},{r['gups_now']}")
+    regressed = []
+    if warn_regress is not None:
+        bar = 1.0 + float(warn_regress)
+        regressed = [r for r in rows if r["wall_ratio"] > bar]
+        for r in regressed:
+            print(f"WARNING: perf regression {r['name']}: "
+                  f"{r['wall_ratio']:.2f}x wall vs prior "
+                  f"(threshold {bar:.2f}x)")
+        if not regressed and rows:
+            print(f"# no wall regression beyond {bar:.2f}x")
+    return regressed

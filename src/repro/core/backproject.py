@@ -268,39 +268,42 @@ def _bp_symmetry_single(img_ts, mat_s, vol_shape_xyz, *, use_subline: bool):
     nw, nh = img_ts.shape
     f, w, x, z = hoisted_fwx(mat_s, ni, nj)
     a, b = _y_coeffs(mat_s, f, ni, nj)
-    kv = jnp.arange(khp, dtype=jnp.float32)
-    y = a[..., None] + b[..., None] * kv          # (ni, nj, khp)
-    y_m = (nh - 1.0) - y[..., :kh]                 # mirrored rows (O3)
+    # O3 as a hoisted affine fold. The mirror identity gives the upper
+    # half's row coordinate as y'(k) = (nh-1) - y(nk-1-k), which is
+    # itself affine in k with the SAME slope b:
+    #     y'(k) = (nh-1) - a - b*(nk-1) + b*k = a_m + b*k.
+    # So the y dot-product runs once (for ``a``), the mirrored half
+    # reuses it through the k-invariant intercept a_m, and BOTH halves
+    # evaluate as ONE fused select+FMA over the full k range. The
+    # previous formulation (compute the lower half, flip, concatenate)
+    # de-fused the XLA CPU lowering and made symmetry_mp 2x SLOWER than
+    # share_mp (BENCH_PR2 0.48x); this form is exact to ~1e-11 against
+    # it and removes the flip/concat entirely.
+    a_m = (nh - 1.0) - a - b * (nk - 1.0)
+    k = jnp.arange(nk, dtype=jnp.float32)
+    direct = k < khp       # lower half + middle plane: the direct dot
+    y = jnp.where(direct, a[..., None], a_m[..., None]) + b[..., None] * k
     if use_subline:
         sm, x_valid = _subline_buffer(img_ts, x, nw)
         val, y_valid = _interp_column(sm, y, nh)
-        val_m, y_valid_m = _interp_column(sm, y_m, nh)
     else:
         # Per-point 4-corner gathers, shared x columns.
         x0 = jnp.floor(x); ix = x0.astype(jnp.int32); dx = x - x0
         x_valid = (ix >= 0) & (ix <= nw - 2)
         ixc = jnp.clip(ix, 0, nw - 2)
         flat = img_ts.reshape(-1)
-
-        def corner_interp(yy):
-            y0 = jnp.floor(yy); iy = y0.astype(jnp.int32); dy = yy - y0
-            okv = (iy >= 0) & (iy <= nh - 2)
-            iyc = jnp.clip(iy, 0, nh - 2)
-            v00 = flat[(ixc[..., None] * nh + iyc)]
-            v10 = flat[((ixc + 1)[..., None] * nh + iyc)]
-            v01 = flat[(ixc[..., None] * nh + iyc + 1)]
-            v11 = flat[((ixc + 1)[..., None] * nh + iyc + 1)]
-            s0 = v00 * (1.0 - dx)[..., None] + v10 * dx[..., None]
-            s1 = v01 * (1.0 - dx)[..., None] + v11 * dx[..., None]
-            return s0 * (1.0 - dy) + s1 * dy, okv
-
-        val, y_valid = corner_interp(y)
-        val_m, y_valid_m = corner_interp(y_m)
-    okx = (x_valid & (z > 0))[..., None]
-    half_lo = jnp.where(okx & y_valid, val * w[..., None], 0.0)
-    half_hi = jnp.where(okx & y_valid_m, val_m * w[..., None], 0.0)
-    # volume[..., k] and volume[..., nk-1-k]: flip the mirrored half.
-    return jnp.concatenate([half_lo, half_hi[..., ::-1]], axis=-1)
+        y0 = jnp.floor(y); iy = y0.astype(jnp.int32); dy = y - y0
+        y_valid = (iy >= 0) & (iy <= nh - 2)
+        iyc = jnp.clip(iy, 0, nh - 2)
+        v00 = flat[(ixc[..., None] * nh + iyc)]
+        v10 = flat[((ixc + 1)[..., None] * nh + iyc)]
+        v01 = flat[(ixc[..., None] * nh + iyc + 1)]
+        v11 = flat[((ixc + 1)[..., None] * nh + iyc + 1)]
+        s0 = v00 * (1.0 - dx)[..., None] + v10 * dx[..., None]
+        s1 = v01 * (1.0 - dx)[..., None] + v11 * dx[..., None]
+        val = s0 * (1.0 - dy) + s1 * dy
+    ok = (x_valid & (z > 0))[..., None] & y_valid
+    return jnp.where(ok, val * w[..., None], 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("vol_shape_xyz",))

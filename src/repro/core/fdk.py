@@ -25,7 +25,7 @@ from .geometry import CTGeometry, projection_matrices
 def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
                 tiling, memory_budget: Optional[int],
                 proj_batch: Optional[int], out: Optional[str],
-                **kernel_options):
+                schedule: Optional[str] = None, **kernel_options):
     """Shared façade-to-planner translation (tiling= conventions)."""
     from repro.runtime.planner import plan_reconstruction
 
@@ -40,7 +40,7 @@ def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
     return plan_reconstruction(
         geom, variant, tile_shape=tile_shape, memory_budget=memory_budget,
         nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
-        **kernel_options)
+        schedule=schedule, **kernel_options)
 
 
 def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
@@ -50,6 +50,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     memory_budget: Optional[int] = None,
                     proj_batch: Optional[int] = None,
                     out: Optional[str] = None,
+                    schedule: Optional[str] = None,
                     **kernel_options) -> jnp.ndarray:
     """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw).
 
@@ -60,19 +61,25 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
 
     ``proj_batch`` streams the projections through in chunks of that
     many views (rounded up to a multiple of ``nb``), with FDK
-    pre-weighting + ramp filtering fused into the chunk loop — neither
-    the volume NOR the filtered projection set need fit in memory.
+    pre-weighting + ramp filtering fused into the chunk pipeline —
+    neither the volume NOR the filtered projection set need fit in
+    memory (the latter strictly under ``schedule="chunk"``).
 
     ``out`` selects the accumulator placement ("host" | "device");
     the default is "host" for tiled plans (the accumulator never
     materializes on device — that is the point) and "device" for the
-    untiled plan. All parameter validation happens in the planner.
+    untiled plan. ``schedule`` selects the loop order: "step" (scanned
+    device-resident tile accumulators, one host crossing per step),
+    "chunk" (the chunk-major streaming loop), or None (default — the
+    planner picks "chunk" when a ``memory_budget`` bounds device bytes,
+    "step" otherwise). All parameter validation happens in the planner.
     """
     from repro.runtime.executor import PlanExecutor
 
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
-                       proj_batch=proj_batch, out=out, **kernel_options)
+                       proj_batch=proj_batch, out=out, schedule=schedule,
+                       **kernel_options)
     return PlanExecutor(geom, plan).reconstruct(projections)
 
 
@@ -91,6 +98,7 @@ def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
               tiling: Union[None, str, Sequence[int]] = None,
               memory_budget: Optional[int] = None,
               proj_batch: Optional[int] = None,
+              schedule: Optional[str] = None,
               **kernel_options) -> jnp.ndarray:
     """One SART update (demonstrates the paper's iterative-recon use).
 
@@ -119,7 +127,7 @@ def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
                        proj_batch=proj_batch, out="device",
-                       **kernel_options)
+                       schedule=schedule, **kernel_options)
     ex = PlanExecutor(geom, plan)
 
     mats = projection_matrices(geom)

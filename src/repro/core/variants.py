@@ -83,26 +83,30 @@ def _subline_batch(img_t, mat, vol_shape_xyz, nb: int = 8, **_):
 
 
 def _subline_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
-                    interpret: bool = True, block=(4, 8), **_):
+                    interpret: bool = True, block=(4, 8),
+                    proj_loop: bool = False, **_):
     from repro.kernels import ops
     return ops.backproject_subline(img_t, mat, vol_shape_xyz, nb=nb,
-                                   block=block, interpret=interpret)
+                                   block=block, interpret=interpret,
+                                   proj_loop=proj_loop)
 
 
 def _onehot_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
                    interpret: bool = True, block=(4, 8),
-                   k_chunk: int = 128, **_):
+                   k_chunk: int = 128, proj_loop: bool = False, **_):
     from repro.kernels import ops
     return ops.backproject_onehot(img_t, mat, vol_shape_xyz, nb=nb,
                                   block=block, k_chunk=k_chunk,
-                                  interpret=interpret)
+                                  interpret=interpret, proj_loop=proj_loop)
 
 
 def _banded_pallas(img_t, mat, vol_shape_xyz, nb: int = 8,
-                   interpret: bool = True, block=(4, 8), bw: int = 32, **_):
+                   interpret: bool = True, block=(4, 8), bw: int = 32,
+                   proj_loop: bool = False, **_):
     from repro.kernels import ops
     return ops.backproject_banded(img_t, mat, vol_shape_xyz, nb=nb,
-                                  block=block, bw=bw, interpret=interpret)
+                                  block=block, bw=bw, interpret=interpret,
+                                  proj_loop=proj_loop)
 
 
 # --------------------------------------------------------------------------
@@ -133,6 +137,13 @@ class KernelSpec:
         that inspects concrete matrix VALUES at trace time — e.g. the
         banded kernel's data-dependent band schedule — must opt out and
         is cached un-wrapped instead).
+    proj_loop : whether the kernel supports the fused multi-batch mode —
+        an in-kernel ``fori_loop`` over ``nb``-sized projection batches
+        with the Z-slab accumulator held in the VMEM output ref, cutting
+        per-launch output read-modify-write traffic by the batch factor
+        (the paper's O1 loop order + O3 locality carried INTO the
+        kernel). The planner defaults the ``proj_loop`` option ON for
+        specs that advertise it.
     """
 
     name: str
@@ -142,6 +153,7 @@ class KernelSpec:
     slab_safe_fallback: Optional[str] = None
     backend: str = "jax"
     jittable: bool = True
+    proj_loop: bool = False
 
     @property
     def uses_symmetry(self) -> bool:
@@ -158,7 +170,7 @@ class KernelSpec:
                 if k in self.options and v is not None}
 
 
-_PL_OPTS = frozenset({"nb", "interpret", "block"})
+_PL_OPTS = frozenset({"nb", "interpret", "block", "proj_loop"})
 
 REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
     KernelSpec("baseline", _baseline_adapter, (), backend="reference"),
@@ -179,12 +191,14 @@ REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
                ("transpose", "share", "symmetry", "subline", "batch",
                 "localmem", "prefetch"),
                options=_PL_OPTS,
-               slab_safe_fallback="subline_batch_mp", backend="pallas"),
+               slab_safe_fallback="subline_batch_mp", backend="pallas",
+               proj_loop=True),
     KernelSpec("onehot_pl", _onehot_pallas,
                ("transpose", "share", "symmetry", "subline", "batch",
                 "localmem", "prefetch", "mxu-interp"),
                options=_PL_OPTS | {"k_chunk"},
-               slab_safe_fallback="subline_batch_mp", backend="pallas"),
+               slab_safe_fallback="subline_batch_mp", backend="pallas",
+               proj_loop=True),
     # jittable=False: the band schedule is computed from concrete matrix
     # values at trace time (np.asarray(mat) in the kernel wrapper)
     KernelSpec("banded_pl", _banded_pallas,
@@ -192,7 +206,7 @@ REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
                 "localmem", "prefetch", "banded-prefetch"),
                options=_PL_OPTS | {"bw"},
                slab_safe_fallback="subline_batch_mp", backend="pallas",
-               jittable=False),
+               jittable=False, proj_loop=True),
 )}
 
 
@@ -216,6 +230,10 @@ def _validate_registry() -> None:
             raise ValueError(
                 f"symmetry-free variant {spec.name!r} must not declare a "
                 f"slab_safe_fallback")
+        if spec.proj_loop and "proj_loop" not in spec.options:
+            raise ValueError(
+                f"{spec.name!r} advertises proj_loop but does not accept "
+                f"the 'proj_loop' call option")
 
 
 _validate_registry()

@@ -34,7 +34,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .backproject_subline import _line_scalars
+from .backproject_subline import _accumulate_projection, fused_batch_ok
 
 
 def band_layout(img_t: jnp.ndarray, bw: int):
@@ -49,11 +49,15 @@ def band_layout(img_t: jnp.ndarray, bw: int):
 
 
 def tile_bands(mat: np.ndarray, ni: int, nj: int, BI: int, BJ: int,
-               bw: int, n_bands: int, nw: int):
+               bw: int, n_bands: int, nw: int, group: int = 1):
     """band[s, ti, tj] block index + the max span (for the BW check).
 
     Corner evaluation is exact for z>0 (linear-fractional x over the
-    tile rectangle attains extrema at corners).
+    tile rectangle attains extrema at corners). ``group > 1`` reduces
+    over groups of that many consecutive projections — the fused
+    multi-batch (``proj_loop``) kernel shares ONE band per in-kernel
+    batch, so the span check must cover the batch's x-range union and
+    the returned array has one row per batch.
     """
     mat = np.asarray(mat, np.float64)
     ti = np.arange(ni // BI)
@@ -73,6 +77,11 @@ def tile_bands(mat: np.ndarray, ni: int, nj: int, BI: int, BJ: int,
     xs = np.stack(xs)                                # (4,Ti,Tj,ns)
     xmin = np.clip(xs.min(0), 0, nw - 1)
     xmax = np.clip(xs.max(0), 0, nw - 1)
+    if group > 1:
+        t_i, t_j, ns = xmin.shape
+        assert ns % group == 0, (ns, group)
+        xmin = xmin.reshape(t_i, t_j, ns // group, group).min(-1)
+        xmax = xmax.reshape(t_i, t_j, ns // group, group).max(-1)
     span = float((xmax - xmin).max()) + 2.0
     band = np.clip((xmin // bw).astype(np.int32), 0, n_bands - 1)
     # (ns, Ti, Tj) layout for the prefetch array
@@ -80,8 +89,6 @@ def tile_bands(mat: np.ndarray, ni: int, nj: int, BI: int, BJ: int,
 
 
 def _make_kernel(BI: int, BJ: int, nz: int, bw: int, nw: int, nh: int):
-    kh = nz // 2
-    khp = nz - kh
     GJ = BJ // 8
 
     def kernel(band_ref, mat_ref, img_ref, out_ref, smem_ref):
@@ -94,54 +101,42 @@ def _make_kernel(BI: int, BJ: int, nz: int, bw: int, nw: int, nh: int):
             out_ref[...] = jnp.zeros_like(out_ref)
 
         col0 = band_ref[s, ti, tj] * bw           # global col of block[0]
+        _accumulate_projection(
+            mat_ref, lambda loc: img_ref[pl.ds(loc, 2), :],
+            out_ref, smem_ref, ti * BI, tj * BJ, BI, GJ, nz, nw, nh,
+            band=(col0, 2 * bw))
 
-        for ii in range(BI):
-            i_g = ti * BI + ii
-            for jg in range(GJ):
-                f_list, w_list = [], []
-                for jj in range(8):
-                    j_g = tj * BJ + jg * 8 + jj
-                    f, w_eff, ixc, dx = _line_scalars(mat_ref, i_g, j_g,
-                                                      nw)
-                    loc = jnp.clip(ixc - col0, 0, 2 * bw - 2)
-                    # zero the line if the band misses (never happens
-                    # when the wrapper's span check passed; belt+braces)
-                    in_band = (ixc - col0 >= 0) & (ixc - col0 <= 2*bw - 2)
-                    w_eff = jnp.where(in_band, w_eff, 0.0)
-                    cols = img_ref[pl.ds(loc, 2), :]      # (2, nh)
-                    smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
-                    f_list.append(f)
-                    w_list.append(w_eff)
-                f_vec = jnp.stack(f_list).reshape(8, 1)
-                w_vec = jnp.stack(w_list).reshape(8, 1)
-                i_f = i_g.astype(jnp.float32)
-                j_base = (tj * BJ + jg * 8).astype(jnp.float32)
-                j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
-                j_vec = j_base + j_off
-                k = jax.lax.broadcasted_iota(jnp.float32, (8, khp), 1)
-                a = (mat_ref[1, 0] * i_f + mat_ref[1, 1] * j_vec
-                     + mat_ref[1, 3]) * f_vec
-                b = mat_ref[1, 2] * f_vec
-                y = a + b * k
-                sm = smem_ref[...]
+    return kernel
 
-                def interp(yy):
-                    y0 = jnp.floor(yy)
-                    iy = y0.astype(jnp.int32)
-                    dy = yy - y0
-                    ok = (iy >= 0) & (iy <= nh - 2)
-                    iyc = jnp.clip(iy, 0, nh - 2)
-                    s0 = jnp.take_along_axis(sm, iyc, axis=1)
-                    s1 = jnp.take_along_axis(sm, iyc + 1, axis=1)
-                    v = s0 * (1.0 - dy) + s1 * dy
-                    return jnp.where(ok, v, 0.0)
 
-                lo = interp(y) * w_vec
-                y_m = (nh - 1.0) - y[:, :kh]
-                hi = interp(y_m) * w_vec
-                jlo = jg * 8
-                out_ref[ii, jlo:jlo + 8, :khp] += lo
-                out_ref[ii, jlo:jlo + 8, khp:] += hi[:, ::-1]
+def _make_fused_kernel(BI: int, BJ: int, nz: int, bw: int, nw: int,
+                       nh: int, nb: int):
+    """Fused multi-batch mode (``proj_loop``): one band block + one
+    (nb, 3, 4) matrix block per grid step, in-kernel ``fori_loop`` over
+    the batch. The band is SHARED by the batch (tile_bands group=nb
+    guarantees the batch's x-range union fits the 2*bw window), so the
+    prefetch engine DMAs one band per nb projections."""
+    GJ = BJ // 8
+
+    def kernel(band_ref, mat_ref, img_ref, out_ref, smem_ref):
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+        sb = pl.program_id(2)
+
+        @pl.when(sb == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        col0 = band_ref[sb, ti, tj] * bw          # batch-shared band
+
+        def body(b, carry):
+            _accumulate_projection(
+                mat_ref[b], lambda loc: img_ref[b, pl.ds(loc, 2), :],
+                out_ref, smem_ref, ti * BI, tj * BJ, BI, GJ, nz, nw, nh,
+                band=(col0, 2 * bw))
+            return carry
+
+        jax.lax.fori_loop(0, nb, body, 0)
 
     return kernel
 
@@ -183,25 +178,72 @@ def _banded_call(img_b, mat, band, vol_shape_xyz, *, block, bw, nw,
     )(band, mat.astype(jnp.float32), img_b.astype(jnp.float32))
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("vol_shape_xyz", "block", "bw", "nw", "nb",
+                     "interpret"),
+)
+def _banded_call_fused(img_b, mat, band, vol_shape_xyz, *, block, bw, nw,
+                       nb, interpret):
+    n_proj = img_b.shape[0]
+    nh = img_b.shape[3]
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    kernel = _make_fused_kernel(BI, BJ, nz, bw, nw, nh, nb)
+    grid = (ni // BI, nj // BJ, n_proj // nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, 3, 4), lambda ti, tj, s, band: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((nb, None, 2 * bw, nh),
+                         lambda ti, tj, s, band: (s, band[s, ti, tj],
+                                                  0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ, nz),
+                               lambda ti, tj, s, band: (ti, tj, 0)),
+        scratch_shapes=[pltpu.VMEM((8, nh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),
+        interpret=interpret,
+    )(band, mat.astype(jnp.float32), img_b.astype(jnp.float32))
+
+
 def backproject_banded(img_t: jnp.ndarray, mat: jnp.ndarray,
                        vol_shape_xyz, *, block=(4, 8), bw: int = 32,
+                       nb: int = 0, proj_loop: bool = False,
                        interpret: bool = True) -> jnp.ndarray:
     """Banded back-projection. img_t (np, nw, nh); returns (ni, nj, nz).
 
     Picks/validates the band width: requires max tile x-span + 2 <= bw
-    (doubling bw until it holds), then runs the scalar-prefetched kernel.
+    (doubling bw until it holds), then runs the scalar-prefetched
+    kernel. With ``proj_loop`` (and ``n_proj`` divisible by ``nb``) the
+    fused multi-batch kernel runs instead: one band per nb-projection
+    batch (the span check covers the batch union — wider motion per
+    batch may force a larger bw), 1/nb output read-modify-write traffic.
     """
     n_proj, nw, nh = img_t.shape
     ni, nj, nz = vol_shape_xyz
     BI, BJ = block
     assert ni % BI == 0 and nj % BJ == 0 and BJ % 8 == 0
+    fused = fused_batch_ok(n_proj, nb, proj_loop)
+    group = nb if fused else 1
     mat_np = np.asarray(mat)
     while True:
         n_bands = max(1, -(-nw // bw))
-        band, span = tile_bands(mat_np, ni, nj, BI, BJ, bw, n_bands, nw)
+        band, span = tile_bands(mat_np, ni, nj, BI, BJ, bw, n_bands, nw,
+                                group=group)
         if span <= bw or bw >= nw:
             break
         bw *= 2
     img_b, n_bands = band_layout(img_t, bw)
+    if fused:
+        return _banded_call_fused(
+            img_b, mat, jnp.asarray(band), tuple(vol_shape_xyz),
+            block=block, bw=bw, nw=nw, nb=nb, interpret=interpret)
     return _banded_call(img_b, mat, jnp.asarray(band), tuple(vol_shape_xyz),
                         block=block, bw=bw, nw=nw, interpret=interpret)

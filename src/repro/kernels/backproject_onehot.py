@@ -28,12 +28,64 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .backproject_subline import _line_scalars
+from .backproject_subline import _stage1_lines, _y_affine
+
+
+def _accumulate_projection_onehot(m, img_cols, out_ref, smem_ref, i0, j0,
+                                  BI: int, GJ: int, nz: int, nw: int,
+                                  nh: int, k_chunk: int, n_iota):
+    """Accumulate ONE projection via the MXU one-hot contraction.
+
+    Shared between the per-projection grid kernel and the fused
+    multi-batch (``proj_loop``) kernel; stage 1 and the y-coefficient
+    hoist are the sub-line kernel's (``_stage1_lines``/``_y_affine``) —
+    only stage 2 (gather -> MXU contraction) differs."""
+    kh = nz // 2          # mirrored half
+    khp = nz - kh         # direct half (includes middle plane for odd nz)
+    for ii in range(BI):
+        i_g = i0 + ii
+        for jg in range(GJ):
+            f_vec, w_vec = _stage1_lines(m, img_cols, smem_ref, i_g, j0,
+                                         jg, nw)
+            a, b = _y_affine(m, i_g, j0, jg, f_vec)
+            sm = smem_ref[...]                              # (8, nh)
+
+            def interp_onehot(yy):
+                """(8, kc) coords -> (8, kc) values via MXU contraction."""
+                y0 = jnp.floor(yy)
+                iy = y0.astype(jnp.int32)
+                dy = yy - y0
+                ok = (iy >= 0) & (iy <= nh - 2)
+                iyc = jnp.clip(iy, 0, nh - 2)
+                lo = (n_iota == iyc[..., None]).astype(jnp.float32)
+                hi = (n_iota == (iyc + 1)[..., None]).astype(jnp.float32)
+                A = lo * (1.0 - dy)[..., None] + hi * dy[..., None]
+                A = A * ok[..., None].astype(jnp.float32)
+                # batched GEMV on the MXU: (8, kc, nh) x (8, nh) -> (8, kc)
+                return jax.lax.dot_general(
+                    A, sm,
+                    dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                    preferred_element_type=jnp.float32)
+
+            jlo = jg * 8
+            for kc0 in range(0, khp, k_chunk):
+                kc = min(k_chunk, khp - kc0)
+                k = kc0 + jax.lax.broadcasted_iota(
+                    jnp.float32, (8, kc), 1)
+                y = a + b * k
+                lo_v = interp_onehot(y) * w_vec
+                out_ref[ii, jlo:jlo + 8, kc0:kc0 + kc] += lo_v
+                # Mirrored half only covers k < kh (skips the odd-nz
+                # self-mirrored middle plane).
+                kch = max(0, min(kc0 + kc, kh) - kc0)
+                if kch > 0:
+                    hi_v = interp_onehot(
+                        (nh - 1.0) - y[:, :kch]) * w_vec
+                    out_ref[ii, jlo:jlo + 8,
+                            nz - kc0 - kch:nz - kc0] += hi_v[:, ::-1]
 
 
 def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int, k_chunk: int):
-    kh = nz // 2          # mirrored half
-    khp = nz - kh         # direct half (includes middle plane for odd nz)
     GJ = BJ // 8
 
     def kernel(mat_ref, img_ref, out_ref, smem_ref):
@@ -46,62 +98,41 @@ def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int, k_chunk: int):
             out_ref[...] = jnp.zeros_like(out_ref)
 
         n_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nh), 2)
+        _accumulate_projection_onehot(
+            mat_ref, lambda ixc: img_ref[pl.ds(ixc, 2), :],
+            out_ref, smem_ref, ti * BI, tj * BJ, BI, GJ, nz, nw, nh,
+            k_chunk, n_iota)
 
-        for ii in range(BI):
-            i_g = ti * BI + ii
-            for jg in range(GJ):
-                f_list, w_list = [], []
-                for jj in range(8):
-                    j_g = tj * BJ + jg * 8 + jj
-                    f, w_eff, ixc, dx = _line_scalars(mat_ref, i_g, j_g, nw)
-                    cols = img_ref[pl.ds(ixc, 2), :]
-                    smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
-                    f_list.append(f)
-                    w_list.append(w_eff)
-                f_vec = jnp.stack(f_list).reshape(8, 1)
-                w_vec = jnp.stack(w_list).reshape(8, 1)
-                i_f = i_g.astype(jnp.float32)
-                j_base = (tj * BJ + jg * 8).astype(jnp.float32)
-                j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
-                j_vec = j_base + j_off
-                a = (mat_ref[1, 0] * i_f + mat_ref[1, 1] * j_vec
-                     + mat_ref[1, 3]) * f_vec
-                b = mat_ref[1, 2] * f_vec
-                sm = smem_ref[...]                              # (8, nh)
+    return kernel
 
-                def interp_onehot(yy):
-                    """(8, kc) coords -> (8, kc) values via MXU contraction."""
-                    y0 = jnp.floor(yy)
-                    iy = y0.astype(jnp.int32)
-                    dy = yy - y0
-                    ok = (iy >= 0) & (iy <= nh - 2)
-                    iyc = jnp.clip(iy, 0, nh - 2)
-                    lo = (n_iota == iyc[..., None]).astype(jnp.float32)
-                    hi = (n_iota == (iyc + 1)[..., None]).astype(jnp.float32)
-                    A = lo * (1.0 - dy)[..., None] + hi * dy[..., None]
-                    A = A * ok[..., None].astype(jnp.float32)
-                    # batched GEMV on the MXU: (8, kc, nh) x (8, nh) -> (8, kc)
-                    return jax.lax.dot_general(
-                        A, sm,
-                        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-                        preferred_element_type=jnp.float32)
 
-                jlo = jg * 8
-                for kc0 in range(0, khp, k_chunk):
-                    kc = min(k_chunk, khp - kc0)
-                    k = kc0 + jax.lax.broadcasted_iota(
-                        jnp.float32, (8, kc), 1)
-                    y = a + b * k
-                    lo_v = interp_onehot(y) * w_vec
-                    out_ref[ii, jlo:jlo + 8, kc0:kc0 + kc] += lo_v
-                    # Mirrored half only covers k < kh (skips the odd-nz
-                    # self-mirrored middle plane).
-                    kch = max(0, min(kc0 + kc, kh) - kc0)
-                    if kch > 0:
-                        hi_v = interp_onehot(
-                            (nh - 1.0) - y[:, :kch]) * w_vec
-                        out_ref[ii, jlo:jlo + 8,
-                                nz - kc0 - kch:nz - kc0] += hi_v[:, ::-1]
+def _make_fused_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int,
+                       k_chunk: int, nb: int):
+    """Fused multi-batch mode (``proj_loop``): in-kernel ``fori_loop``
+    over the nb projections of one batch block — the Z-slab accumulator
+    is read-modified-written once per batch instead of once per
+    projection (see backproject_subline._make_fused_kernel)."""
+    GJ = BJ // 8
+
+    def kernel(mat_ref, img_ref, out_ref, smem_ref):
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+        sb = pl.program_id(2)
+
+        @pl.when(sb == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        n_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nh), 2)
+
+        def body(b, carry):
+            _accumulate_projection_onehot(
+                mat_ref[b], lambda ixc: img_ref[b, pl.ds(ixc, 2), :],
+                out_ref, smem_ref, ti * BI, tj * BJ, BI, GJ, nz, nw, nh,
+                k_chunk, n_iota)
+            return carry
+
+        jax.lax.fori_loop(0, nb, body, 0)
 
     return kernel
 
@@ -129,6 +160,40 @@ def backproject_onehot_pallas(img_t: jnp.ndarray, mat: jnp.ndarray,
             pl.BlockSpec((None, 3, 4), lambda ti, tj, s: (s, 0, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((None, nw, nh), lambda ti, tj, s: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ, nz), lambda ti, tj, s: (ti, tj, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, nh), jnp.float32)],
+        interpret=interpret,
+    )(mat.astype(jnp.float32), img_t.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vol_shape_xyz", "block", "k_chunk", "nb", "interpret"),
+)
+def backproject_onehot_fused(img_t: jnp.ndarray, mat: jnp.ndarray,
+                             vol_shape_xyz, *, block=(4, 8),
+                             k_chunk: int = 128, nb: int = 8,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Fused multi-batch (``proj_loop``) form of the one-hot kernel;
+    requires ``n_proj % nb == 0`` (ops.py falls back otherwise)."""
+    n_proj, nw, nh = img_t.shape
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    assert ni % BI == 0 and nj % BJ == 0 and BJ % 8 == 0
+    assert n_proj % nb == 0 and nb >= 1, (n_proj, nb)
+    k_chunk = min(k_chunk, nz - nz // 2)
+
+    kernel = _make_fused_kernel(BI, BJ, nz, nw, nh, k_chunk, nb)
+    grid = (ni // BI, nj // BJ, n_proj // nb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, 3, 4), lambda ti, tj, s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((nb, nw, nh), lambda ti, tj, s: (s, 0, 0)),
         ],
         out_specs=pl.BlockSpec((BI, BJ, nz), lambda ti, tj, s: (ti, tj, 0)),
         out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),

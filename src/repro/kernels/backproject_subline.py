@@ -37,6 +37,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def fused_batch_ok(n_proj: int, nb: int, proj_loop: bool) -> bool:
+    """Whether the fused multi-batch (``proj_loop``) kernel may run: an
+    in-kernel batch needs nb >= 2 and an nb-divisible projection count
+    (the executor pads globally; raw callers fall back silently). The
+    ONE eligibility rule, shared by all three kernel wrappers."""
+    return bool(proj_loop) and nb > 1 and n_proj % nb == 0
+
+
 def _line_scalars(mat_ref, i_g, j_g, nw):
     """Scalar-core computation of z, F, W, X, x-column and blend weight
     for one voxel line (i_g, j_g). Everything here is k-invariant (O2)."""
@@ -56,11 +64,91 @@ def _line_scalars(mat_ref, i_g, j_g, nw):
     return f, w_eff, ixc, dx
 
 
-def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int):
-    # Symmetry split: k in [0, khp) computed directly (includes the
-    # self-mirrored middle plane when nz is odd), k in [khp, nz) mirrored.
+def _stage1_lines(m, img_cols, smem_ref, i_g, j0, jg, nw, band=None):
+    """Stage 1 for one 8-line group (O4, Fig. 3a): blend the two
+    detector columns of each line into the sMem scratch; returns the
+    (8, 1) ``f`` and effective-weight vectors.
+
+    ``m`` is the 3x4 matrix (SMEM ref or loaded array — both
+    scalar-indexable); ``img_cols(ixc)`` returns the (2, nh) detector
+    columns at column ``ixc``; ``band=(col0, two_bw)`` remaps detector
+    columns into a 2*bw band block starting at global column ``col0``
+    (lines whose columns miss the band are zeroed).
+    """
+    f_list, w_list = [], []
+    for jj in range(8):
+        j_g = j0 + jg * 8 + jj
+        f, w_eff, ixc, dx = _line_scalars(m, i_g, j_g, nw)
+        if band is not None:
+            col0, two_bw = band
+            rel = ixc - col0
+            # zero the line if the band misses (never happens when
+            # the wrapper's span check passed; belt+braces)
+            w_eff = jnp.where((rel >= 0) & (rel <= two_bw - 2),
+                              w_eff, 0.0)
+            ixc = jnp.clip(rel, 0, two_bw - 2)
+        cols = img_cols(ixc)                      # (2, nh)
+        smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
+        f_list.append(f)
+        w_list.append(w_eff)
+    return (jnp.stack(f_list).reshape(8, 1),
+            jnp.stack(w_list).reshape(8, 1))
+
+
+def _y_affine(m, i_g, j0, jg, f_vec):
+    """The (8, 1) y-coefficients a, b with y(k) = a + b*k (O2 hoist)."""
+    i_f = i_g.astype(jnp.float32)
+    j_base = (j0 + jg * 8).astype(jnp.float32)
+    j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
+    j_vec = j_base + j_off                         # (8, 1)
+    a = (m[1, 0] * i_f + m[1, 1] * j_vec + m[1, 3]) * f_vec
+    b = m[1, 2] * f_vec
+    return a, b
+
+
+def _accumulate_projection(m, img_cols, out_ref, smem_ref, i0, j0,
+                           BI: int, GJ: int, nz: int, nw: int, nh: int,
+                           band=None):
+    """Accumulate ONE projection into the (BI, BJ, nz) output block.
+
+    Shared between the per-projection grid kernel and the fused
+    multi-batch (``proj_loop``) kernel — and, via ``band``, by the
+    banded kernel family (see :func:`_stage1_lines` for the ``m`` /
+    ``img_cols`` / ``band`` calling convention).
+    """
     kh = nz // 2          # mirrored half
     khp = nz - kh         # direct half (== kh, or kh+1 when nz odd)
+    for ii in range(BI):
+        i_g = i0 + ii
+        for jg in range(GJ):
+            f_vec, w_vec = _stage1_lines(m, img_cols, smem_ref, i_g, j0,
+                                         jg, nw, band=band)
+            # --- stage 2: vectorized y interpolation (Fig. 3b) -------
+            a, b = _y_affine(m, i_g, j0, jg, f_vec)
+            k = jax.lax.broadcasted_iota(jnp.float32, (8, khp), 1)
+            y = a + b * k                                  # (8, khp)
+            sm = smem_ref[...]                             # (8, nh)
+
+            def interp(yy):
+                y0 = jnp.floor(yy)
+                iy = y0.astype(jnp.int32)
+                dy = yy - y0
+                ok = (iy >= 0) & (iy <= nh - 2)
+                iyc = jnp.clip(iy, 0, nh - 2)
+                s0 = jnp.take_along_axis(sm, iyc, axis=1)
+                s1 = jnp.take_along_axis(sm, iyc + 1, axis=1)
+                v = s0 * (1.0 - dy) + s1 * dy
+                return jnp.where(ok, v, 0.0)
+
+            lo = interp(y) * w_vec                         # k in [0, khp)
+            y_m = (nh - 1.0) - y[:, :kh]                   # O3 mirror
+            hi = interp(y_m) * w_vec                       # k in [khp, nz)
+            jlo = jg * 8
+            out_ref[ii, jlo:jlo + 8, :khp] += lo
+            out_ref[ii, jlo:jlo + 8, khp:] += hi[:, ::-1]
+
+
+def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int):
     GJ = BJ // 8  # groups of 8 lines (sublanes)
 
     def kernel(mat_ref, img_ref, out_ref, smem_ref):
@@ -72,49 +160,39 @@ def _make_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int):
         def _init():
             out_ref[...] = jnp.zeros_like(out_ref)
 
-        for ii in range(BI):
-            i_g = ti * BI + ii
-            for jg in range(GJ):
-                f_list, w_list = [], []
-                # --- stage 1: sub-line blends for 8 lines (O4, Fig. 3a) --
-                for jj in range(8):
-                    j_g = tj * BJ + jg * 8 + jj
-                    f, w_eff, ixc, dx = _line_scalars(mat_ref, i_g, j_g, nw)
-                    cols = img_ref[pl.ds(ixc, 2), :]          # (2, nh)
-                    smem_ref[jj, :] = cols[0] * (1.0 - dx) + cols[1] * dx
-                    f_list.append(f)
-                    w_list.append(w_eff)
-                f_vec = jnp.stack(f_list).reshape(8, 1)
-                w_vec = jnp.stack(w_list).reshape(8, 1)
-                # --- stage 2: vectorized y interpolation (Fig. 3b) -------
-                i_f = i_g.astype(jnp.float32)
-                j_base = (tj * BJ + jg * 8).astype(jnp.float32)
-                j_off = jax.lax.broadcasted_iota(jnp.float32, (8, 1), 0)
-                j_vec = j_base + j_off                         # (8, 1)
-                k = jax.lax.broadcasted_iota(jnp.float32, (8, khp), 1)
-                a = (mat_ref[1, 0] * i_f + mat_ref[1, 1] * j_vec
-                     + mat_ref[1, 3]) * f_vec                  # (8, 1)
-                b = mat_ref[1, 2] * f_vec                      # (8, 1)
-                y = a + b * k                                  # (8, khp)
-                sm = smem_ref[...]                             # (8, nh)
+        _accumulate_projection(
+            mat_ref, lambda ixc: img_ref[pl.ds(ixc, 2), :],
+            out_ref, smem_ref, ti * BI, tj * BJ, BI, GJ, nz, nw, nh)
 
-                def interp(yy):
-                    y0 = jnp.floor(yy)
-                    iy = y0.astype(jnp.int32)
-                    dy = yy - y0
-                    ok = (iy >= 0) & (iy <= nh - 2)
-                    iyc = jnp.clip(iy, 0, nh - 2)
-                    s0 = jnp.take_along_axis(sm, iyc, axis=1)
-                    s1 = jnp.take_along_axis(sm, iyc + 1, axis=1)
-                    v = s0 * (1.0 - dy) + s1 * dy
-                    return jnp.where(ok, v, 0.0)
+    return kernel
 
-                lo = interp(y) * w_vec                         # k in [0, khp)
-                y_m = (nh - 1.0) - y[:, :kh]                   # O3 mirror
-                hi = interp(y_m) * w_vec                       # k in [khp, nz)
-                jlo = jg * 8
-                out_ref[ii, jlo:jlo + 8, :khp] += lo
-                out_ref[ii, jlo:jlo + 8, khp:] += hi[:, ::-1]
+
+def _make_fused_kernel(BI: int, BJ: int, nz: int, nw: int, nh: int,
+                       nb: int):
+    """Fused multi-batch mode (``proj_loop``): the grid's projection
+    axis runs over nb-sized BATCHES and a ``fori_loop`` walks the batch
+    inside the kernel, so the (BI, BJ, nz) Z-slab accumulator is
+    read-modified-written once per nb projections instead of once per
+    projection — the paper's O1 loop order + O3 locality carried into
+    the kernel (1/nb output traffic, §3.1.3)."""
+    GJ = BJ // 8
+
+    def kernel(mat_ref, img_ref, out_ref, smem_ref):
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+        sb = pl.program_id(2)
+
+        @pl.when(sb == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        def body(b, carry):
+            _accumulate_projection(
+                mat_ref[b], lambda ixc: img_ref[b, pl.ds(ixc, 2), :],
+                out_ref, smem_ref, ti * BI, tj * BJ, BI, GJ, nz, nw, nh)
+            return carry
+
+        jax.lax.fori_loop(0, nb, body, 0)
 
     return kernel
 
@@ -147,6 +225,46 @@ def backproject_subline_pallas(img_t: jnp.ndarray, mat: jnp.ndarray,
             pl.BlockSpec((None, 3, 4), lambda ti, tj, s: (s, 0, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((None, nw, nh), lambda ti, tj, s: (s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BI, BJ, nz), lambda ti, tj, s: (ti, tj, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((8, nh), jnp.float32)],
+        interpret=interpret,
+    )(mat.astype(jnp.float32), img_t.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vol_shape_xyz", "block", "nb", "interpret"),
+)
+def backproject_subline_fused(img_t: jnp.ndarray, mat: jnp.ndarray,
+                              vol_shape_xyz, *, block=(4, 8), nb: int = 8,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Fused multi-batch (``proj_loop``) form of the sub-line kernel.
+
+    Identical math to :func:`backproject_subline_pallas`; the grid's
+    projection axis runs over ``n_proj // nb`` batches, each kernel call
+    receives an (nb, nw, nh) image block + (nb, 3, 4) matrix block and
+    loops the batch in-kernel. Requires ``n_proj % nb == 0`` (the
+    executor pads globally; ops.py falls back to the per-projection
+    grid otherwise).
+    """
+    n_proj, nw, nh = img_t.shape
+    ni, nj, nz = vol_shape_xyz
+    BI, BJ = block
+    assert ni % BI == 0 and nj % BJ == 0 and BJ % 8 == 0, (ni, nj, block)
+    assert n_proj % nb == 0 and nb >= 1, (n_proj, nb)
+
+    kernel = _make_fused_kernel(BI, BJ, nz, nw, nh, nb)
+    grid = (ni // BI, nj // BJ, n_proj // nb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, 3, 4), lambda ti, tj, s: (s, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((nb, nw, nh), lambda ti, tj, s: (s, 0, 0)),
         ],
         out_specs=pl.BlockSpec((BI, BJ, nz), lambda ti, tj, s: (ti, tj, 0)),
         out_shape=jax.ShapeDtypeStruct((ni, nj, nz), jnp.float32),

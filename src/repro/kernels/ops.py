@@ -16,8 +16,11 @@ import functools
 import jax.numpy as jnp
 
 from .backproject_banded import backproject_banded as _backproject_banded
-from .backproject_onehot import backproject_onehot_pallas
-from .backproject_subline import backproject_subline_pallas
+from .backproject_onehot import (backproject_onehot_fused,
+                                 backproject_onehot_pallas)
+from .backproject_subline import (backproject_subline_fused,
+                                  backproject_subline_pallas,
+                                  fused_batch_ok)
 
 # KernelSpec contract (core.variants.REGISTRY): the call-time options each
 # public wrapper consumes. The registry's Pallas KernelSpecs must declare
@@ -25,14 +28,24 @@ from .backproject_subline import backproject_subline_pallas
 # so a new kernel knob cannot be added here without the planner (which
 # filters options through KernelSpec.options) learning about it.
 ACCEPTED_OPTIONS = {
-    "backproject_subline": frozenset({"nb", "block", "interpret"}),
-    "backproject_onehot": frozenset({"nb", "block", "k_chunk", "interpret"}),
-    "backproject_banded": frozenset({"nb", "block", "bw", "interpret"}),
+    "backproject_subline": frozenset({"nb", "block", "proj_loop",
+                                      "interpret"}),
+    "backproject_onehot": frozenset({"nb", "block", "k_chunk", "proj_loop",
+                                     "interpret"}),
+    "backproject_banded": frozenset({"nb", "block", "bw", "proj_loop",
+                                     "interpret"}),
 }
 
 
 def _pad_to(n: int, b: int) -> int:
     return ((n + b - 1) // b) * b
+
+
+def _fused_ok(img_t, nb: int, proj_loop: bool) -> bool:
+    """Fused-mode eligibility (see kernels.backproject_subline
+    ``fused_batch_ok`` — the one definition, shared with the banded
+    wrapper's internal routing)."""
+    return fused_batch_ok(img_t.shape[0], nb, proj_loop)
 
 
 def _run_padded(fn, img_t, mat, vol_shape_xyz, block, **kw):
@@ -52,25 +65,36 @@ def _run_padded(fn, img_t, mat, vol_shape_xyz, block, **kw):
 
 def backproject_subline(img_t: jnp.ndarray, mat: jnp.ndarray,
                         vol_shape_xyz, *, nb: int = 0,
-                        block=(4, 8), interpret: bool = True) -> jnp.ndarray:
+                        block=(4, 8), proj_loop: bool = False,
+                        interpret: bool = True) -> jnp.ndarray:
     """Paper Algorithm 1 as a Pallas kernel (symmetry_pf analogue).
 
-    ``nb`` is accepted for registry-signature uniformity but ignored: the
-    output-stationary Pallas schedule holds the volume tile in VMEM across
-    ALL projections, which is the nb -> np ideal of the paper's batching
-    (one volume write total). See DESIGN.md §2.
+    The output-stationary Pallas schedule holds the volume tile in VMEM
+    across ALL projections — the nb -> np ideal of the paper's batching.
+    With ``proj_loop`` the projection grid additionally runs over
+    nb-sized batches with an in-kernel ``fori_loop``, cutting the
+    per-grid-step output read-modify-write by the batch factor (paper
+    O5 inside the kernel); without it ``nb`` is accepted for registry-
+    signature uniformity but ignored. See DESIGN.md §2.
     """
-    del nb
+    if _fused_ok(img_t, nb, proj_loop):
+        return _run_padded(backproject_subline_fused, img_t, mat,
+                           tuple(vol_shape_xyz), block, nb=nb,
+                           interpret=interpret)
     return _run_padded(backproject_subline_pallas, img_t, mat,
                        tuple(vol_shape_xyz), block, interpret=interpret)
 
 
 def backproject_onehot(img_t: jnp.ndarray, mat: jnp.ndarray,
                        vol_shape_xyz, *, nb: int = 0, block=(4, 8),
-                       k_chunk: int = 128,
+                       k_chunk: int = 128, proj_loop: bool = False,
                        interpret: bool = True) -> jnp.ndarray:
-    """Beyond-paper MXU one-hot interpolation kernel."""
-    del nb
+    """Beyond-paper MXU one-hot interpolation kernel (``proj_loop``:
+    fused multi-batch mode, see :func:`backproject_subline`)."""
+    if _fused_ok(img_t, nb, proj_loop):
+        return _run_padded(backproject_onehot_fused, img_t, mat,
+                           tuple(vol_shape_xyz), block, k_chunk=k_chunk,
+                           nb=nb, interpret=interpret)
     return _run_padded(backproject_onehot_pallas, img_t, mat,
                        tuple(vol_shape_xyz), block, k_chunk=k_chunk,
                        interpret=interpret)
@@ -78,15 +102,18 @@ def backproject_onehot(img_t: jnp.ndarray, mat: jnp.ndarray,
 
 def backproject_banded(img_t: jnp.ndarray, mat: jnp.ndarray,
                        vol_shape_xyz, *, nb: int = 0, block=(4, 8),
-                       bw: int = 32, interpret: bool = True) -> jnp.ndarray:
+                       bw: int = 32, proj_loop: bool = False,
+                       interpret: bool = True) -> jnp.ndarray:
     """Beyond-paper geometry-prefetched banded kernel (C3): streams only
-    the ~2*bw detector columns each (tile, projection) pair touches."""
-    del nb
+    the ~2*bw detector columns each (tile, projection) pair touches.
+    ``proj_loop`` shares one band per nb-projection batch (the kernel
+    wrapper widens bw until the batch union fits)."""
     ni, nj, nz = vol_shape_xyz
     BI, BJ = block
     nip, njp = _pad_to(ni, BI), _pad_to(nj, BJ)
     vol = _backproject_banded(img_t, mat, (nip, njp, nz), block=block,
-                              bw=bw, interpret=interpret)
+                              bw=bw, nb=nb, proj_loop=proj_loop,
+                              interpret=interpret)
     if (nip, njp) != (ni, nj):
         vol = vol[:ni, :nj]
     return vol

@@ -98,6 +98,12 @@ class TiledReconstructor:
         set: each chunk is pre-weighted + ramp-filtered on the fly.
     out : "host" (numpy accumulator, device holds one tile) | "device".
     interpret : forwarded to the Pallas variants.
+    schedule : "step" (scanned device-resident tile accumulators, one
+        host crossing per step) | "chunk" (chunk-major streaming:
+        filtered projections stay two-chunk-bounded on device —
+        current + prefetched) | None
+        (default — the planner resolves it: "chunk" when a
+        ``memory_budget`` bounds device bytes, "step" otherwise).
     cache : optional private ProgramCache (default: process-shared).
     """
 
@@ -106,6 +112,7 @@ class TiledReconstructor:
                  memory_budget: Optional[int] = None,
                  nb: int = 8, proj_batch: Optional[int] = None,
                  out: str = "host", interpret: bool = True,
+                 schedule: Optional[str] = None,
                  cache: Optional[ProgramCache] = None,
                  **kernel_options):
         self.geom = geom
@@ -113,7 +120,8 @@ class TiledReconstructor:
         self.recon_plan: ReconPlan = plan_reconstruction(
             geom, variant, tile_shape=tile_shape,
             memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
-            out=out, interpret=interpret, **kernel_options)
+            out=out, interpret=interpret, schedule=schedule,
+            **kernel_options)
         self._executor = PlanExecutor(geom, self.recon_plan, cache=cache)
 
     # ---- introspection ---------------------------------------------------

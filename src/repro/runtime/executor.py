@@ -7,19 +7,30 @@ this module turns it into arrays:
     ``(variant, call_shape, nb, dtype, interpret, options)`` key, shared
     by the tiled, untiled, and distributed executors: interior tiles of
     equal shape and repeated ``reconstruct`` calls reuse the same
-    program instead of retracing. Hits/misses are introspectable
-    (``cache.stats()``), and a module-level default cache persists across
-    executors so repeated façade calls stay warm.
+    program instead of retracing. The step-major schedule adds a second
+    key family: ``scan_program`` keys additionally carry the chunk-loop
+    shape ``(n_chunks, chunk_size)`` and map to a ``lax.scan``
+    MEGAPROGRAM that sweeps the whole projection-chunk axis on device.
+    Hits/misses are introspectable (``cache.stats()``), and a
+    module-level default cache persists across executors so repeated
+    façade calls stay warm.
 
-  * :class:`PlanExecutor` — the **execute** stage. Walks the plan's
-    projection-chunk x tile-step schedule. ``reconstruct`` fuses FDK
-    pre-weighting + ramp filtering INTO the projection-chunk loop
-    (``core.filtering.fdk_filter_chunk``), so filtered projections are
-    never materialized whole — projections, like the volume, stream
-    through a bounded working set. Host placement is double-buffered:
-    the ``np.asarray`` device->host copy of tile ``n`` is issued only
-    after tile ``n+1``'s back-projection has been dispatched, so the
-    copy overlaps compute under JAX's async dispatch.
+  * :class:`PlanExecutor` — the **execute** stage. The default
+    (``plan.schedule == "step"``) walk is STEP-MAJOR: for each tile
+    step, one scan megaprogram carries the tile accumulator across ALL
+    projection chunks device-resident and the result crosses to the
+    host exactly once — O(vol) device->host volume traffic and one
+    dispatch per step, vs the chunk-major O(n_chunks x vol) traffic and
+    O(n_chunks x n_steps) dispatches. Chunk filtering is hoisted into a
+    filter-once producer that feeds every step. ``schedule == "chunk"``
+    keeps the PR-2 chunk-major loop (kept as the parity oracle and for
+    workloads where the filtered projection set must stay chunk-bounded
+    on device), now with input-side double buffering: the next chunk's
+    filtering is dispatched before the current chunk's host flush, so
+    it overlaps under JAX's async dispatch. Host placement remains
+    output-side double-buffered in both orders: the ``np.asarray``
+    device->host copy of step ``n`` is issued only after step ``n+1``'s
+    programs have been dispatched.
 """
 
 from __future__ import annotations
@@ -41,7 +52,10 @@ from repro.core.tiling import (
     translate_matrices,
 )
 from repro.core.variants import get_spec
-from repro.runtime.planner import PlanStep, ReconPlan, resolve_tile_variant
+from repro.runtime.planner import (
+    PlanStep, ReconPlan, StepMajorSchedule, build_step_major,
+    resolve_tile_variant,
+)
 
 
 # --------------------------------------------------------------------------
@@ -97,6 +111,54 @@ class ProgramCache:
 
         return self.get_or_build(key, build)
 
+    def scan_program(self, variant: str, call_shape: Tuple[int, int, int],
+                     nb: int, dtype: str, interpret: bool,
+                     options: Tuple = (), *, n_chunks: int,
+                     chunk_size: int) -> Callable:
+        """Step-major megaprogram: ``prog(img_chunks, mat_chunks) ->
+        vol_t(call_shape)`` where the inputs are the STACKED chunk axes
+        ``(n_chunks, chunk_size, ...)``.
+
+        One ``lax.scan`` carries the call-shape accumulator across all
+        projection chunks on device — the executor emits it to host once
+        per step instead of once per (step, chunk). The key gains the
+        chunk-loop shape, so interior tiles of equal shape still compile
+        exactly once per (variant, call_shape, chunk grid).
+        """
+        key = ("scan", variant, tuple(call_shape), int(nb), str(dtype),
+               bool(interpret), tuple(options), int(n_chunks),
+               int(chunk_size))
+
+        def build():
+            spec = get_spec(variant)
+            opts = spec.resolve_options(
+                {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
+            shape = tuple(call_shape)
+            fn = spec.fn
+            if spec.jittable:
+                def prog(img_s, mat_s):
+                    def body(acc, xs):
+                        img_c, mat_c = xs
+                        return acc + fn(img_c, mat_c, shape, **opts), None
+                    acc, _ = jax.lax.scan(
+                        body, jnp.zeros(shape, jnp.float32), (img_s, mat_s))
+                    return acc
+                return jax.jit(prog)
+
+            # non-jittable kernels (banded_pl reads concrete matrix
+            # values at trace time) cannot sit under lax.scan: fall back
+            # to a python chunk loop with a DONATED device accumulator —
+            # still device-resident, still one host crossing per step.
+            def prog(img_s, mat_s):
+                acc = None
+                for c in range(int(n_chunks)):
+                    part = fn(img_s[c], mat_s[c], shape, **opts)
+                    acc = part if acc is None else _acc_add(acc, part)
+                return acc
+            return prog
+
+        return self.get_or_build(key, build)
+
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
@@ -130,6 +192,37 @@ def _place_device_add(vol, tile, idx):
     return jax.lax.dynamic_update_slice(vol, cur + tile, org)
 
 
+# donated-carry accumulation for the non-jittable scan fallback: the
+# accumulator buffer is reused across chunk iterations instead of
+# allocating a fresh volume per chunk.
+@functools.partial(jax.jit, donate_argnums=0)
+def _acc_add(acc, part):
+    return acc + part
+
+
+def _pad_rows(img: jnp.ndarray, mat: jnp.ndarray, n_rows: int):
+    """Pad projections + matrices to ``n_rows`` leading rows — zero
+    images (back-projection is linear: they add nothing) paired with
+    :func:`_pad_mats`' repeated-last-matrix padding."""
+    pad = int(n_rows) - img.shape[0]
+    if pad <= 0:
+        return img, mat
+    img = jnp.concatenate(
+        [img, jnp.zeros((pad,) + img.shape[1:], img.dtype)], axis=0)
+    return img, _pad_mats(mat, int(n_rows))
+
+
+def _stack_chunks(img_p: jnp.ndarray, mat_p: jnp.ndarray,
+                  sched: StepMajorSchedule):
+    """Reshape padded projections to the scan grid ``(n_chunks,
+    chunk_size, ...)``, zero-padding the tail chunk's slack rows."""
+    img_p, mat_p = _pad_rows(img_p, mat_p, sched.n_scan)
+    img_s = img_p.reshape((sched.n_chunks, sched.chunk_size)
+                          + img_p.shape[1:])
+    mat_s = mat_p.reshape(sched.n_chunks, sched.chunk_size, 3, 4)
+    return img_s, mat_s
+
+
 def _pad_mats(mats: jnp.ndarray, n_pad: int) -> jnp.ndarray:
     """Pad (np, 3, 4) matrices to n_pad rows by repeating the last one
     (a valid geometry: no 1/z poles — pairs with zero-image padding)."""
@@ -140,12 +233,67 @@ def _pad_mats(mats: jnp.ndarray, n_pad: int) -> jnp.ndarray:
         [mats, jnp.broadcast_to(mats[-1:], (pad, 3, 4))], axis=0)
 
 
+class _FilteredChunkProducer:
+    """Filter-once projection-chunk source for ``reconstruct``.
+
+    Memoizes the filtered + transposed chunks of ``plan.chunks`` so the
+    filtering cost is paid once per chunk regardless of how many
+    consumers (tile steps) read it, and exposes ``prefetch`` so the
+    NEXT chunk's filtering is dispatched — asynchronously, under JAX's
+    lazy execution — while the current chunk's programs and host flush
+    run: PR 2's output-side double buffering extended to the input
+    side. ``stacked`` hoists the whole producer for the step-major
+    scan: every chunk filtered exactly once, stacked onto the scan
+    grid. ``drop`` releases a consumed chunk in chunk-major streaming
+    so device residency stays two-chunk-bounded (the consumed chunk +
+    the prefetched next one).
+    """
+
+    def __init__(self, ex: "PlanExecutor", projections: jnp.ndarray,
+                 mat_p: jnp.ndarray):
+        self._ex = ex
+        self._projections = projections
+        self._mat_p = mat_p
+        self._chunks = ex.plan.chunks
+        self._memo: Dict[int, tuple] = {}
+
+    def get(self, c: int):
+        """Filtered ``(img_c, mat_c)`` of chunk ``c`` (memoized)."""
+        if c not in self._memo:
+            s0, s1 = self._chunks[c]
+            self._memo[c] = self._ex._chunk_inputs(
+                self._projections, self._mat_p, s0, s1)
+        return self._memo[c]
+
+    def prefetch(self, c: int) -> None:
+        """Dispatch chunk ``c``'s filtering now (no-op out of range)."""
+        if 0 <= c < len(self._chunks):
+            self.get(c)
+
+    def drop(self, c: int) -> None:
+        self._memo.pop(c, None)
+
+    def stacked(self, sched: StepMajorSchedule):
+        """All chunks, filtered once each, as the scan grid stack."""
+        imgs, mats = [], []
+        for c in range(sched.n_chunks):
+            img_c, mat_c = self.get(c)
+            self.drop(c)   # the stack is the only remaining consumer
+            # tail chunk -> uniform scan slot
+            img_c, mat_c = _pad_rows(img_c, mat_c, sched.chunk_size)
+            imgs.append(img_c)
+            mats.append(mat_c)
+        return jnp.stack(imgs), jnp.stack(mats)
+
+
 class PlanExecutor:
     """Executes a :class:`ReconPlan` against projection data.
 
     One executor serves any number of calls; programs come from the
     (shared) :class:`ProgramCache`, so repeated calls and same-shape
-    tiles never retrace.
+    tiles never retrace. The loop ORDER follows ``plan.schedule``:
+    step-major scanned device accumulators by default, the chunk-major
+    PR-2 loop on request.
     """
 
     def __init__(self, geom: CTGeometry, plan: ReconPlan,
@@ -161,10 +309,23 @@ class PlanExecutor:
                                   "float32", self.plan.interpret,
                                   self.plan.options)
 
+    def _scan_program(self, variant: str, call_shape,
+                      sched: StepMajorSchedule) -> Callable:
+        return self.cache.scan_program(variant, call_shape, self.plan.nb,
+                                       "float32", self.plan.interpret,
+                                       self.plan.options,
+                                       n_chunks=sched.n_chunks,
+                                       chunk_size=sched.chunk_size)
+
     def warm(self) -> Dict[str, int]:
         """Compile every distinct program the plan needs; return stats."""
-        for variant, shape in self.plan.program_keys:
-            self._program(variant, shape)
+        if self.plan.schedule == "step":
+            sched = self.plan.step_major
+            for variant, shape in self.plan.program_keys:
+                self._scan_program(variant, shape, sched)
+        else:
+            for variant, shape in self.plan.program_keys:
+                self._program(variant, shape)
         return self.cache.stats()
 
     # ---- execute-stage helpers ------------------------------------------
@@ -201,19 +362,24 @@ class PlanExecutor:
                 and steps[0].call_shape == self.plan.vol_shape_xyz
                 and (steps[0].i0, steps[0].j0, steps[0].k_off) == (0, 0, 0))
 
+    @staticmethod
+    def _step_writes(step: PlanStep, out: jnp.ndarray):
+        """(volume slices, device piece) pairs of one step's output."""
+        isl = slice(step.i0, step.i0 + step.ni)
+        jsl = slice(step.j0, step.j0 + step.nj)
+        return tuple(((isl, jsl, slice(w.k0, w.k0 + w.nk)),
+                      out[..., w.lo:w.hi]) for w in step.writes)
+
     def _backproject_chunk(self, vol, img_c: jnp.ndarray,
                            mat_c: jnp.ndarray):
-        """Accumulate one projection chunk into the volume, all steps."""
+        """Chunk-major: accumulate ONE projection chunk, all steps."""
         plan = self.plan
         host = plan.out == "host"
         pending = ()   # previous step's (slices, device piece) writes
         for step in plan.steps:
             prog = self._program(step.variant, step.call_shape)
             out = prog(img_c, self._translated(mat_c, step))
-            isl = slice(step.i0, step.i0 + step.ni)
-            jsl = slice(step.j0, step.j0 + step.nj)
-            cur = tuple(((isl, jsl, slice(w.k0, w.k0 + w.nk)),
-                         out[..., w.lo:w.hi]) for w in step.writes)
+            cur = self._step_writes(step, out)
             if host:
                 # double buffer: flush step n-1's device->host copies
                 # only after step n's programs are dispatched, so the
@@ -230,7 +396,44 @@ class PlanExecutor:
             vol[sl] += np.asarray(piece)
         return vol
 
+    def _execute_step_major(self, vol, img_s: jnp.ndarray,
+                            mat_s: jnp.ndarray,
+                            sched: StepMajorSchedule):
+        """Step-major: per step, ONE scanned device-resident accumulator
+        across all chunks, ONE (double-buffered) host emission.
+
+        ``img_s``/``mat_s`` are the stacked scan grids ``(n_chunks,
+        chunk_size, ...)``. Total device->host volume traffic is O(vol)
+        — each voxel crosses once — and dispatches are O(n_steps).
+        """
+        plan = self.plan
+        host = plan.out == "host"
+        pending = ()
+        for work in sched.steps:
+            step = work.step
+            prog = self._scan_program(step.variant, step.call_shape, sched)
+            out = prog(img_s, self._translated(mat_s, step))
+            cur = self._step_writes(step, out)
+            if host:
+                for sl, piece in pending:
+                    vol[sl] += np.asarray(piece)
+                pending = cur
+            else:
+                for (i_s, j_s, k_s), piece in cur:
+                    idx = jnp.asarray([i_s.start, j_s.start, k_s.start],
+                                      jnp.int32)
+                    vol = _place_device_add(vol, piece, idx)
+        for sl, piece in pending:
+            vol[sl] += np.asarray(piece)
+        return vol
+
     # ---- full-volume drivers --------------------------------------------
+
+    def _data_step_major(self, chunks) -> StepMajorSchedule:
+        """Step-major schedule over a DATA-dependent chunk list (the
+        plan contributes the steps, the input contributes the extent)."""
+        return build_step_major(self.plan.steps, chunks,
+                                chunks[0][1] - chunks[0][0])
 
     def backproject(self, img_t: jnp.ndarray, mats: jnp.ndarray):
         """Back-project pre-filtered transposed projections.
@@ -242,6 +445,15 @@ class PlanExecutor:
         plan = self.plan
         img_p, mat_p = pad_projection_batch(img_t, mats, plan.nb)
         chunks = self._chunks_for(img_p.shape[0])
+        if plan.schedule == "step":
+            sched = self._data_step_major(chunks)
+            img_s, mat_s = _stack_chunks(img_p, mat_p, sched)
+            if self._single_full_call() and plan.out == "device":
+                step = plan.steps[0]
+                return self._scan_program(step.variant, step.call_shape,
+                                          sched)(img_s, mat_s)
+            return self._execute_step_major(self._alloc(), img_s, mat_s,
+                                            sched)
         if self._single_full_call() and plan.out == "device":
             step = plan.steps[0]
             prog = self._program(step.variant, step.call_shape)
@@ -261,12 +473,17 @@ class PlanExecutor:
         (slab-safe fallback resolved here for non-centered boxes)."""
         plan = self.plan
         name = resolve_tile_variant(plan.variant, tile, plan.vol_shape_xyz[2])
-        prog = self._program(name, tile.shape)
         img_p, mat_p = pad_projection_batch(img_t, mats, plan.nb)
         mat_p = translate_matrices(mat_p, float(tile.i0), float(tile.j0),
                                    float(tile.k0))
+        chunks = self._chunks_for(img_p.shape[0])
+        if plan.schedule == "step":
+            sched = self._data_step_major(chunks)
+            img_s, mat_s = _stack_chunks(img_p, mat_p, sched)
+            return self._scan_program(name, tile.shape, sched)(img_s, mat_s)
+        prog = self._program(name, tile.shape)
         acc = None
-        for s0, s1 in self._chunks_for(img_p.shape[0]):
+        for s0, s1 in chunks:
             part = prog(img_p[s0:s1], mat_p[s0:s1])
             acc = part if acc is None else acc + part
         return acc
@@ -291,9 +508,15 @@ class PlanExecutor:
         """Filtered FDK: (np, nh, nw) raw -> (nz, ny, nx) volume.
 
         Pre-weighting + ramp filtering run inside the projection-chunk
-        loop — with ``plan.streams_projections`` the filtered set is
-        never whole in memory. Returns numpy when ``plan.out == "host"``
-        (a free transposed view of the host accumulator).
+        pipeline, each chunk filtered exactly once (the hoisted
+        :class:`_FilteredChunkProducer` feeds every tile step). Under
+        the default step-major schedule the filtered chunk stack rides
+        on device for the scan; ``schedule="chunk"`` keeps device
+        residency two-chunk-bounded — the consumed chunk plus the
+        prefetched next one, whose filtering is dispatched early so it
+        overlaps the current chunk's compute. Returns numpy when
+        ``plan.out == "host"`` (a free transposed view of the host
+        accumulator).
         """
         plan = self.plan
         if projections.shape[0] != plan.n_proj:
@@ -304,19 +527,35 @@ class PlanExecutor:
                 f"view subsets filter upstream and call backproject()")
         mat_p = _pad_mats(projection_matrices(self.geom),
                           plan.n_proj_padded)
-        if self._single_full_call() and plan.out == "device":
+        producer = _FilteredChunkProducer(self, projections, mat_p)
+        if plan.schedule == "step":
+            sched = plan.step_major
+            img_s, mat_s = producer.stacked(sched)
+            if self._single_full_call() and plan.out == "device":
+                step = plan.steps[0]
+                acc = self._scan_program(step.variant, step.call_shape,
+                                         sched)(img_s, mat_s)
+                return bp.volume_to_native(acc)
+            vol = self._execute_step_major(self._alloc(), img_s, mat_s,
+                                           sched)
+        elif self._single_full_call() and plan.out == "device":
             step = plan.steps[0]
             prog = self._program(step.variant, step.call_shape)
             acc = None
-            for s0, s1 in plan.chunks:
-                img_c, mat_c = self._chunk_inputs(projections, mat_p, s0, s1)
+            for c in range(len(plan.chunks)):
+                img_c, mat_c = producer.get(c)
+                producer.prefetch(c + 1)   # overlaps this chunk's compute
                 part = prog(img_c, mat_c)
                 acc = part if acc is None else acc + part
+                producer.drop(c)
             return bp.volume_to_native(acc)
-        vol = self._alloc()
-        for s0, s1 in plan.chunks:
-            img_c, mat_c = self._chunk_inputs(projections, mat_p, s0, s1)
-            vol = self._backproject_chunk(vol, img_c, mat_c)
+        else:
+            vol = self._alloc()
+            for c in range(len(plan.chunks)):
+                img_c, mat_c = producer.get(c)
+                producer.prefetch(c + 1)   # overlaps this chunk's compute
+                vol = self._backproject_chunk(vol, img_c, mat_c)
+                producer.drop(c)
         if isinstance(vol, np.ndarray):
             # out="host": the accumulator may exceed device memory —
             # transpose is a free numpy view, never round-trip it

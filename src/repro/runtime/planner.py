@@ -25,6 +25,13 @@ The plan owns every scheduling decision the paper ties performance to:
     zero images + repeated matrices — exactly zero contribution), which
     is what lets the executor stream pre-weighting + ramp filtering
     through the chunk loop instead of filtering the whole set up front;
+  * the loop ORDER: ``schedule="step"`` (default) inverts execution to
+    step-major — :class:`StepMajorSchedule` gives every step the full
+    chunk work list, the executor carries each step's tile accumulator
+    across all chunks on device (one ``lax.scan`` megaprogram per
+    program key) and emits it to host exactly once, so device->host
+    volume traffic is O(vol) instead of the chunk-major O(n_chunks x
+    vol); ``schedule="chunk"`` keeps the PR-2 chunk-major loop;
   * option validation, in ONE place, for every façade
     (``fdk_reconstruct``, ``sart_step``, ``TiledReconstructor``,
     ``backproject_distributed``).
@@ -90,13 +97,79 @@ class PlanStep:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChunkWork:
+    """One projection chunk as seen by a step-major schedule: chunk
+    number ``index`` covering padded projection rows ``[s0, s1)``. The
+    tail chunk may be smaller than the uniform scan slot (``size <
+    chunk_size``); the difference is zero-image scan padding."""
+
+    index: int
+    s0: int
+    s1: int
+
+    @property
+    def size(self) -> int:
+        return self.s1 - self.s0
+
+
+@dataclasses.dataclass(frozen=True)
+class StepWork:
+    """One step-major unit of work: a kernel step plus the full chunk
+    list its device-resident accumulator is scanned over."""
+
+    step: PlanStep
+    chunks: Tuple[ChunkWork, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepMajorSchedule:
+    """Step-major view of a plan: per-step chunk work lists + the scan
+    grid shape.
+
+    The executor's scan megaprogram consumes a uniform
+    ``(n_chunks, chunk_size, ...)`` chunk stack; ``n_scan = n_chunks *
+    chunk_size`` is the stacked projection extent (rows past the padded
+    projection count are zero images + repeated matrices — exactly zero
+    contribution, same trick as the nb tail pad). Every step scans the
+    SAME chunk list, which is what lets the filtered-chunk producer run
+    once and feed all steps.
+    """
+
+    n_chunks: int
+    chunk_size: int
+    n_scan: int
+    steps: Tuple[StepWork, ...]
+
+
+def build_step_major(steps: Sequence[PlanStep],
+                     chunks: Sequence[Tuple[int, int]],
+                     chunk_size: int) -> StepMajorSchedule:
+    """Invert a (steps x chunks) schedule to step-major work lists.
+
+    Shared by :attr:`ReconPlan.step_major` (the planned projection
+    count) and the executor's data-dependent path (``backproject``
+    accepts any view count, so its chunk list follows the input)."""
+    work = tuple(ChunkWork(c, s0, s1) for c, (s0, s1) in enumerate(chunks))
+    n_chunks = len(work)
+    return StepMajorSchedule(
+        n_chunks=n_chunks, chunk_size=int(chunk_size),
+        n_scan=n_chunks * int(chunk_size),
+        steps=tuple(StepWork(s, work) for s in steps))
+
+
+@dataclasses.dataclass(frozen=True)
 class ReconPlan:
     """Complete, immutable schedule for one reconstruction.
 
     ``steps`` covers the volume disjointly via their writes; ``chunks``
-    covers ``[0, n_proj_padded)`` disjointly. ``options`` holds the
-    validated extra kernel options (already filtered to what the
-    requested variant's KernelSpec accepts).
+    covers ``[0, n_proj_padded)`` disjointly. ``schedule`` selects the
+    executor's loop order: ``"step"`` (step-major — the tile accumulator
+    is carried across all projection chunks on device by one scan
+    program and crosses to the host once per step) or ``"chunk"`` (the
+    PR-2 chunk-major loop — one host crossing per step per chunk, kept
+    for bounded-device-memory streaming and as the parity oracle).
+    ``options`` holds the validated extra kernel options (already
+    filtered to what the requested variant's KernelSpec accepts).
     """
 
     vol_shape_xyz: Tuple[int, int, int]
@@ -111,6 +184,7 @@ class ReconPlan:
     interpret: bool
     steps: Tuple[PlanStep, ...]
     options: Tuple[Tuple[str, object], ...] = ()
+    schedule: str = "step"                # "step" | "chunk"
 
     # ---- derived schedules / introspection --------------------------------
 
@@ -125,6 +199,11 @@ class ReconPlan:
     def streams_projections(self) -> bool:
         """Whether more than one chunk flows through the executor."""
         return self.chunk_size < self.n_proj_padded
+
+    @property
+    def step_major(self) -> StepMajorSchedule:
+        """First-class step-major schedule over the planned projections."""
+        return build_step_major(self.steps, self.chunks, self.chunk_size)
 
     @property
     def program_keys(self) -> Tuple[Tuple[str, Tuple[int, int, int]], ...]:
@@ -207,6 +286,7 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
                         proj_batch: Optional[int] = None,
                         out: str = "host",
                         interpret: bool = True,
+                        schedule: Optional[str] = None,
                         **kernel_options) -> ReconPlan:
     """Build the :class:`ReconPlan` every entry point executes.
 
@@ -222,12 +302,29 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         multiple of ``nb``; ``None`` = all at once (a single chunk).
     out : "host" (numpy accumulator, device holds one tile) | "device".
     interpret : forwarded to Pallas variants (CPU CI runs interpret=True).
+    schedule : "step" (device-resident scanned accumulators, one host
+        crossing per step) | "chunk" (the PR-2 chunk-major loop;
+        per-chunk host crossings, but also per-chunk — not whole-set —
+        device residency of the filtered projections) | None (default:
+        resolve it). Step-major stacks the whole filtered projection
+        set on device as the scan input, so an explicit
+        ``memory_budget`` — the caller's byte-bound contract — resolves
+        to "chunk" (whose residency the per-call working-set model
+        soundly describes); everything else resolves to "step".
     kernel_options : extra per-variant knobs (e.g. ``block=``, ``bw=``),
-        validated against the variant's ``KernelSpec.options``.
+        validated against the variant's ``KernelSpec.options``. The
+        ``proj_loop`` fused in-kernel projection loop is resolved here
+        per variant: defaulted ON for kernels whose KernelSpec
+        advertises the capability, absent otherwise.
     """
     spec = get_spec(variant)
     if out not in ("host", "device"):
         raise ValueError(f"out must be 'host' or 'device', got {out!r}")
+    if schedule not in (None, "step", "chunk"):
+        raise ValueError(
+            f"schedule must be 'step', 'chunk' or None, got {schedule!r}")
+    if schedule is None:
+        schedule = "chunk" if memory_budget is not None else "step"
     nb = int(nb)
     if nb < 1:
         raise ValueError(f"nb must be >= 1, got {nb}")
@@ -238,6 +335,12 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
             f"variant {variant!r} does not accept option(s) "
             f"{sorted(unknown)}; its KernelSpec allows "
             f"{sorted(spec.options)}")
+
+    # proj_loop capability resolution (paper O1 loop order + O3 locality
+    # carried INTO the kernel): on by default where the KernelSpec
+    # advertises it; a registry-validated no-op everywhere else.
+    if spec.proj_loop and "proj_loop" not in kernel_options:
+        kernel_options["proj_loop"] = True
 
     nx, ny, nz = geom.volume_shape_xyz
     tile_given = tile_shape is not None
@@ -261,7 +364,8 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         variant=variant, tile_shape=tile, nb=nb,
         n_proj=n_proj, n_proj_padded=n_pad, chunk_size=chunk,
         out=out, interpret=interpret, steps=steps,
-        options=tuple(sorted(spec.resolve_options(kernel_options).items())))
+        options=tuple(sorted(spec.resolve_options(kernel_options).items())),
+        schedule=schedule)
 
     if tile_given and memory_budget is not None and \
             plan.working_set_bytes > int(memory_budget):

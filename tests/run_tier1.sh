@@ -5,9 +5,12 @@
 #      optional dependency may skip a module, but an ImportError at
 #      collection time must fail the gate, never silently shrink it);
 #   2. the exact tier-1 command from ROADMAP.md;
-#   3. NON-GATING perf smoke — `make bench-smoke` writes the
-#      BENCH_PR2.json perf-trajectory snapshot; a failure is reported
-#      but never fails the gate.
+#   3. NON-GATING perf smoke — writes the BENCH_PR3.json
+#      perf-trajectory snapshot and diffs it against the most recent
+#      committed BENCH_*.json: any per-variant wall regression beyond
+#      25% is reported LOUDLY (grep for 'WARNING: perf regression') but
+#      never fails the gate, and the ProgramCache hit/miss totals land
+#      in the snapshot's meta block.
 #
 # Usage: tests/run_tier1.sh  (or `make tier1` from the repo root)
 set -euo pipefail
@@ -26,6 +29,10 @@ python -m pytest -q --co -m "" >/dev/null || {
 echo "== tier-1 stage 2/3: pytest -x -q =="
 python -m pytest -x -q "$@"
 
-echo "== tier-1 stage 3/3: perf smoke (non-gating) =="
-python -m benchmarks.bench_smoke --json BENCH_PR2.json || \
+echo "== tier-1 stage 3/3: perf smoke + trajectory diff (non-gating) =="
+# --diff auto picks the newest committed BENCH_*.json that is not this
+# run's own output (benchmarks.bench_smoke.auto_prior — the one place
+# the comparison base is defined)
+python -m benchmarks.bench_smoke --json BENCH_PR3.json \
+    --diff auto --warn-regress 0.25 || \
     echo "WARNING: bench-smoke failed (non-gating); see output above." >&2
