@@ -2,10 +2,14 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 tier1-slow collect-smoke bench-tiled bench-smoke
+.PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
+	bench-smoke bench-service
 
 tier1:
 	tests/run_tier1.sh
+
+tier1-fast:                    # stages 1+2 only (per-PR CI signal);
+	TIER1_FAST=1 tests/run_tier1.sh    # nightly CI runs the full gate
 
 tier1-slow:                    # opt-in heavyweight Pallas sweeps
 	$(PY) -m pytest -q -m slow
@@ -16,6 +20,9 @@ collect-smoke:                 # collection must never silently fail
 bench-tiled:
 	$(PY) -m benchmarks.bench_tiled
 
-bench-smoke:                   # perf-trajectory snapshot (non-gating)
-	$(PY) -m benchmarks.bench_smoke --json BENCH_PR3.json \
-		--diff auto --warn-regress 0.25
+bench-service:                 # serving layer: cold/warm + overlap
+	$(PY) -m benchmarks.bench_service
+
+bench-smoke:                   # perf-trajectory snapshot (non-gating);
+	$(PY) -m benchmarks.bench_smoke --json auto \
+		--diff auto --warn-regress 0.25    # auto = next BENCH_PR<N>.json

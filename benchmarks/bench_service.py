@@ -1,0 +1,112 @@
+"""Serving-layer benchmark: cold vs warm request latency + pipeline overlap.
+
+Measures the two claims the serving layer (``runtime/service.py``) makes:
+
+  1. **warm << cold** — the first request of a shape pays planning + jit
+     compilation of every program the plan needs; every later same-shape
+     request hits the bucket's cached executor and compiles nothing.
+     Emitted as ``service/cold_request`` and ``service/warm_request``
+     with the warm/cold ratio (the acceptance bar is < 0.5x; in
+     practice compile dominates and the ratio is tiny).
+  2. **async overlap** — the ``pipeline="async"`` flusher thread
+     overlaps step N's device->host accumulator copy with step N+1's
+     scan dispatch. Emitted as ``service/pipeline_sync`` vs
+     ``service/pipeline_async`` with the sync/async wall ratio
+     (``overlap_gain`` > 1 means the stream helped; at smoke sizes the
+     flush is small, so treat this as a trajectory number, not a gate).
+
+A mixed-shape burst at the end exercises bucketing under FIFO traffic
+and prints the :class:`ServiceStats` snapshot.
+
+    PYTHONPATH=src python -m benchmarks.bench_service
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import standard_geometry
+from repro.runtime.executor import PlanExecutor, ProgramCache
+from repro.runtime.planner import plan_reconstruction
+from repro.runtime.service import ReconService
+
+from . import common
+
+
+def _projs(geom, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(
+        rng.rand(geom.n_proj, geom.nh, geom.nw).astype(np.float32))
+
+
+def run(n: int = 24, n_det: int = 32, n_proj: int = 16, nb: int = 4):
+    geom = standard_geometry(n=n, n_det=n_det, n_proj=n_proj)
+    projs = _projs(geom)
+    # several (i, j)-tiles + streamed chunks: the shape class a serving
+    # deployment buckets on, and enough steps for the flush pipeline
+    opts = dict(variant="algorithm1_mp", nb=nb,
+                tiling=(n // 2, n // 2, n), proj_batch=max(nb, n_proj // 2))
+
+    # ---- cold vs warm through the service --------------------------------
+    svc = ReconService(max_inflight=1, cache=ProgramCache())
+    t0 = time.perf_counter()
+    svc.reconstruct(projs, geom, **opts)        # pays plan + all compiles
+    cold = time.perf_counter() - t0
+    warm = common.time_fn(lambda: svc.reconstruct(projs, geom, **opts))
+    common.emit("service/cold_request", cold * 1e6,
+                f"programs={svc.stats().cache['programs']}")
+    common.emit("service/warm_request", warm * 1e6,
+                f"warm_over_cold={warm / cold:.3f}x")
+    ok = warm < 0.5 * cold
+    print(f"# warm {warm * 1e3:.1f} ms vs cold {cold * 1e3:.1f} ms -> "
+          f"{warm / cold:.3f}x ({'OK' if ok else 'FAIL'}: bar 0.5x)")
+    svc.close()
+
+    # ---- pipeline overlap: sync vs async flush on one warmed plan --------
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=nb,
+                               tile_shape=(n // 2, n // 2, n),
+                               proj_batch=max(nb, n_proj // 2), out="host")
+    cache = ProgramCache()
+    walls = {}
+    for pipeline in ("sync", "async"):
+        ex = PlanExecutor(geom, plan, cache=cache, pipeline=pipeline)
+        walls[pipeline] = common.time_fn(lambda: ex.reconstruct(projs))
+    gain = walls["sync"] / walls["async"]
+    common.emit("service/pipeline_sync", walls["sync"] * 1e6,
+                f"steps={len(plan.steps)}")
+    common.emit("service/pipeline_async", walls["async"] * 1e6,
+                f"overlap_gain={gain:.2f}x")
+
+    # ---- mixed-shape FIFO burst ------------------------------------------
+    geom_b = standard_geometry(n=max(8, n // 2), n_det=max(8, n_det // 2),
+                               n_proj=n_proj)
+    projs_b = _projs(geom_b, seed=1)
+    svc = ReconService(max_inflight=2, cache=ProgramCache())
+    svc.warmup([geom, geom_b], **opts)
+    t0 = time.perf_counter()
+    futs = []
+    for i in range(6):
+        g, p = ((geom, projs) if i % 2 == 0 else (geom_b, projs_b))
+        futs.append(svc.submit(p, g, **opts))
+    for f in futs:
+        f.result()
+    burst = time.perf_counter() - t0
+    stats = svc.stats()
+    common.emit("service/mixed_burst6", burst * 1e6,
+                f"buckets={len(stats.buckets)} "
+                f"hit_rate={stats.hit_rate:.2f}")
+    print(f"# {stats}")
+    svc.close()
+
+
+def main() -> None:
+    common.reset_records()
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -4,18 +4,22 @@ Seeds the repo's perf trajectory (BENCH_PR2.json, BENCH_PR3.json, ...):
 runs the optimization-ladder timing (``bench_variants``), the
 tiled-engine sweep (``bench_tiled``) — which now also times the
 step-major vs chunk-major executor schedules on multi-chunk streamed
-FDK — and a bigger-size re-measure of the symmetry family (the
-BENCH_PR2 ``symmetry_mp`` 0.48x number was part real regression — fixed
-by the affine-fold mirror in core/backproject.py — and part smoke-size
-dispatch noise, so the wall claim is re-checked where arithmetic
-dominates). Every emitted row is dumped as structured JSON via
-``common.write_json``; ``--diff`` prints per-variant wall/GUPS deltas
-against a prior BENCH_*.json and ``--warn-regress`` flags (without
-failing — the tier-1 stage is non-gating) any wall regression beyond
-the given fraction.
+FDK — the serving-layer cold/warm + pipeline-overlap numbers
+(``bench_service``), and a bigger-size re-measure of the symmetry
+family (the BENCH_PR2 ``symmetry_mp`` 0.48x number was part real
+regression — fixed by the affine-fold mirror in core/backproject.py —
+and part smoke-size dispatch noise, so the wall claim is re-checked
+where arithmetic dominates). Every emitted row is dumped as structured
+JSON via ``common.write_json``; ``--diff`` prints per-variant wall/GUPS
+deltas against a prior BENCH_*.json and ``--warn-regress`` flags
+(without failing — the tier-1 stage is non-gating; ``--strict``, the
+nightly CI mode, escalates to a nonzero exit) any wall regression
+beyond the given fraction. ``--json auto`` derives the next snapshot
+name from the committed BENCH_PR<N>.json sequence
+(:func:`next_snapshot_path`) so no caller hardcodes it.
 
     PYTHONPATH=src python -m benchmarks.bench_smoke \
-        --json BENCH_PR3.json --diff BENCH_PR2.json --warn-regress 0.25
+        --json auto --diff auto --warn-regress 0.25
 """
 
 from __future__ import annotations
@@ -24,6 +28,7 @@ import argparse
 import glob
 import os
 import re
+import subprocess
 
 import numpy as np
 
@@ -33,7 +38,7 @@ from repro.core import projection_matrices, standard_geometry, \
     transpose_projections
 from repro.core.variants import get_variant
 
-from . import bench_tiled, bench_variants, common
+from . import bench_service, bench_tiled, bench_variants, common
 
 # Smoke sizes: big enough that tiling/batching structure is exercised
 # (several tiles, several nb-batches), small enough for a CI stage.
@@ -64,6 +69,29 @@ def symmetry_recheck(n: int, n_det: int, n_proj: int, nb: int) -> None:
                     f"vs_share={t_share / t:.2f}x")
 
 
+def next_snapshot_path() -> str:
+    """``BENCH_PR<N+1>.json`` where N is the highest COMMITTED snapshot
+    number — the ONE place the per-PR snapshot name is derived.
+
+    Both callers (`make bench-smoke` and tests/run_tier1.sh stage 3)
+    pass ``--json auto``, so each PR writes the next snapshot without
+    either file being edited. Committed names (``git ls-files``) beat a
+    directory glob so repeated local runs keep overwriting the same
+    not-yet-committed snapshot instead of marching the number forward;
+    the glob is the fallback outside a git checkout.
+    """
+    try:
+        listed = subprocess.run(
+            ["git", "ls-files", "BENCH_*.json"], capture_output=True,
+            text=True, check=True).stdout.split()
+    except (OSError, subprocess.CalledProcessError):
+        listed = glob.glob("BENCH_*.json")
+    ns = [int(m.group(1)) for p in listed
+          if (m := re.fullmatch(r"BENCH_PR(\d+)\.json",
+                                os.path.basename(p)))]
+    return f"BENCH_PR{max(ns, default=0) + 1}.json"
+
+
 def auto_prior(out_path) -> str | None:
     """Newest committed BENCH_*.json that is not this run's own output
     — the ONE definition of the trajectory-diff base (used by both
@@ -82,7 +110,9 @@ def auto_prior(out_path) -> str | None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write emitted rows as a perf-trajectory JSON")
+                    help="write emitted rows as a perf-trajectory JSON; "
+                         "'auto' derives the next committed snapshot "
+                         "name (next_snapshot_path -> BENCH_PR<N>.json)")
     ap.add_argument("--diff", metavar="PRIOR_JSON", default=None,
                     help="print per-variant deltas vs a prior "
                          "BENCH_*.json; 'auto' picks the newest one "
@@ -91,11 +121,17 @@ def main(argv=None) -> None:
                     metavar="FRAC",
                     help="with --diff: warn (never fail) when a row's "
                          "wall time regresses beyond this fraction")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero on any --warn-regress hit "
+                         "(reserved for the nightly CI job; the per-PR "
+                         "tier-1 stage stays non-gating)")
     ap.add_argument("--n", type=int, default=SMOKE["n"])
     ap.add_argument("--n-det", type=int, default=SMOKE["n_det"])
     ap.add_argument("--n-proj", type=int, default=SMOKE["n_proj"])
     ap.add_argument("--nb", type=int, default=SMOKE["nb"])
     args = ap.parse_args(argv)
+    if args.json == "auto":
+        args.json = next_snapshot_path()
 
     common.reset_records()
     sizes = dict(n=args.n, n_det=args.n_det, n_proj=args.n_proj, nb=args.nb)
@@ -103,6 +139,8 @@ def main(argv=None) -> None:
     bench_variants.run(**sizes)
     print("# --- tiled (smoke) ---")
     bench_tiled.run(**sizes)
+    print("# --- serving layer (smoke) ---")
+    bench_service.run(**sizes)
     print("# --- symmetry family (realistic size) ---")
     symmetry_recheck(**BIG)
     if args.json:
@@ -119,7 +157,8 @@ def main(argv=None) -> None:
         print("# --diff auto: no prior BENCH_*.json found, skipping diff")
     elif prior:
         common.print_diff(common.load_json(prior),
-                          warn_regress=args.warn_regress)
+                          warn_regress=args.warn_regress,
+                          strict=args.strict)
 
 
 if __name__ == "__main__":

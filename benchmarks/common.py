@@ -129,13 +129,19 @@ def diff_records(prior: Dict, current: Optional[List[Dict]] = None
 
 
 def print_diff(prior: Dict, current: Optional[List[Dict]] = None,
-               warn_regress: Optional[float] = None) -> List[Dict]:
+               warn_regress: Optional[float] = None,
+               strict: bool = False) -> List[Dict]:
     """Print the per-variant trajectory diff; return regressed rows.
 
     ``warn_regress``: warn — loudly, but WITHOUT failing — about any row
     whose wall time regressed by more than that fraction (0.25 = 25%).
     Perf is a non-gating tier-1 stage: regressions must be impossible to
     miss in the log yet never turn the build red (tests/run_tier1.sh).
+
+    ``strict``: escalate those warnings to a nonzero exit
+    (``SystemExit``) — reserved for the nightly CI job, where a red
+    build on a wall regression is the point; local runs and the per-PR
+    gate stay non-gating.
     """
     rows = diff_records(prior, current)
     stamp = prior.get("meta", {}).get("timestamp", "?")
@@ -154,4 +160,8 @@ def print_diff(prior: Dict, current: Optional[List[Dict]] = None,
                   f"(threshold {bar:.2f}x)")
         if not regressed and rows:
             print(f"# no wall regression beyond {bar:.2f}x")
+        if regressed and strict:
+            raise SystemExit(
+                f"FAIL (--strict): {len(regressed)} row(s) regressed "
+                f"beyond {bar:.2f}x wall")
     return regressed

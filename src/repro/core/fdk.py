@@ -51,6 +51,8 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     proj_batch: Optional[int] = None,
                     out: Optional[str] = None,
                     schedule: Optional[str] = None,
+                    pipeline: Optional[str] = None,
+                    service=None,
                     **kernel_options) -> jnp.ndarray:
     """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw).
 
@@ -73,14 +75,41 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
     "chunk" (the chunk-major streaming loop), or None (default — the
     planner picks "chunk" when a ``memory_budget`` bounds device bytes,
     "step" otherwise). All parameter validation happens in the planner.
+
+    ``pipeline`` selects the step-major flush discipline ("sync" —
+    the default — | "async" — a flusher thread overlaps each step's
+    device->host accumulator copy with the next step's scan dispatch;
+    bit-identical output). ``service`` routes the request through a
+    :class:`repro.runtime.service.ReconService` instead of a one-shot
+    executor: repeated same-shape calls land in the same bucket and
+    reuse its cached plan + compiled programs (warm requests never
+    retrace), and the call shares the service's bounded FIFO request
+    queue with any concurrent submitters. The service's bucket
+    executors own the flush discipline (``ReconService(pipeline=)``),
+    so combining ``service=`` with an explicit ``pipeline=`` is an
+    error rather than a silent override.
     """
     from repro.runtime.executor import PlanExecutor
 
+    if service is not None:
+        if pipeline is not None:
+            raise ValueError(
+                "pipeline= is owned by the service's bucket executors "
+                "(ReconService(pipeline=...)); do not pass both "
+                "service= and pipeline=")
+        return service.reconstruct(
+            projections, geom, variant=variant, nb=nb, interpret=interpret,
+            tiling=tiling, memory_budget=memory_budget,
+            proj_batch=proj_batch, out=out, schedule=schedule,
+            **kernel_options)
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
                        proj_batch=proj_batch, out=out, schedule=schedule,
                        **kernel_options)
-    return PlanExecutor(geom, plan).reconstruct(projections)
+    return PlanExecutor(
+        geom, plan,
+        pipeline="sync" if pipeline is None else pipeline,
+    ).reconstruct(projections)
 
 
 def _vol_to_native(vol_t):

@@ -1,4 +1,5 @@
 from .fault_tolerance import FaultTolerantLoop, Heartbeat  # noqa: F401
 from .elastic import remesh_plan, reshard_tree  # noqa: F401
 from .engine import TiledReconstructor  # noqa: F401
+from .service import ReconService, ServiceStats  # noqa: F401
 from .straggler import StragglerMonitor  # noqa: F401

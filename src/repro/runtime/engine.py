@@ -104,6 +104,10 @@ class TiledReconstructor:
         current + prefetched) | None
         (default — the planner resolves it: "chunk" when a
         ``memory_budget`` bounds device bytes, "step" otherwise).
+    pipeline : "sync" (in-thread double-buffered flush) | "async" (a
+        flusher thread overlaps step N's device->host accumulator copy
+        with step N+1's scan dispatch; bit-identical output — see
+        ``runtime.executor.PlanExecutor``).
     cache : optional private ProgramCache (default: process-shared).
     """
 
@@ -113,6 +117,7 @@ class TiledReconstructor:
                  nb: int = 8, proj_batch: Optional[int] = None,
                  out: str = "host", interpret: bool = True,
                  schedule: Optional[str] = None,
+                 pipeline: str = "sync",
                  cache: Optional[ProgramCache] = None,
                  **kernel_options):
         self.geom = geom
@@ -122,7 +127,8 @@ class TiledReconstructor:
             memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
             out=out, interpret=interpret, schedule=schedule,
             **kernel_options)
-        self._executor = PlanExecutor(geom, self.recon_plan, cache=cache)
+        self._executor = PlanExecutor(geom, self.recon_plan, cache=cache,
+                                      pipeline=pipeline)
 
     # ---- introspection ---------------------------------------------------
 

@@ -30,12 +30,19 @@ this module turns it into arrays:
     it overlaps under JAX's async dispatch. Host placement remains
     output-side double-buffered in both orders: the ``np.asarray``
     device->host copy of step ``n`` is issued only after step ``n+1``'s
-    programs have been dispatched.
+    programs have been dispatched. ``pipeline="async"`` upgrades the
+    step-major flush to a real stream — a depth-bounded
+    :class:`_AsyncFlushQueue` flusher thread performs the
+    ``block_until_ready`` + host accumulate off the dispatch thread, so
+    step N's device->host copy genuinely overlaps step N+1's scan
+    dispatch (the serving layer, ``runtime/service.py``, runs this by
+    default).
 """
 
 from __future__ import annotations
 
 import functools
+import queue
 import threading
 from typing import Callable, Dict, Optional, Tuple
 
@@ -223,6 +230,60 @@ def _stack_chunks(img_p: jnp.ndarray, mat_p: jnp.ndarray,
     return img_s, mat_s
 
 
+class _AsyncFlushQueue:
+    """Depth-bounded device->host flush pipeline (the "real streams"
+    seam): step N's accumulator flush overlaps step N+1's dispatch.
+
+    The executor enqueues one step's ``(volume slices, device piece)``
+    writes right after dispatching that step's program and moves on; a
+    single flusher thread dequeues in FIFO order, calls
+    ``jax.block_until_ready`` — the ONLY place the pipeline blocks on
+    the device — and accumulates the ``np.asarray`` copy into the host
+    volume. ``depth`` bounds how many steps' device outputs may be live
+    at once (double-buffered by default: the scanning step plus the
+    flushing one); a full queue applies backpressure to the dispatcher.
+    Exactly one thread writes the host volume, and steps write disjoint
+    regions, so the result is bit-identical to the sequential flush.
+    """
+
+    def __init__(self, vol: np.ndarray, depth: int = 2):
+        self._vol = vol
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(depth)))
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._drain, name="recon-flush", daemon=True)
+        self._thread.start()
+
+    def _drain(self) -> None:
+        while True:
+            writes = self._q.get()
+            try:
+                if writes is None:
+                    return
+                if self._error is None:   # keep consuming after failure
+                    for sl, piece in writes:
+                        piece = jax.block_until_ready(piece)
+                        self._vol[sl] += np.asarray(piece)
+            except BaseException as exc:   # surfaced at put()/close()
+                self._error = exc
+            finally:
+                self._q.task_done()
+
+    def put(self, writes) -> None:
+        """Enqueue one step's writes; blocks only when ``depth`` steps
+        are already in flight (backpressure, not device sync)."""
+        if self._error is not None:
+            raise self._error
+        self._q.put(writes)
+
+    def close(self) -> None:
+        """Drain the queue, join the flusher, re-raise any failure."""
+        self._q.put(None)
+        self._thread.join()
+        if self._error is not None:
+            raise self._error
+
+
 def _pad_mats(mats: jnp.ndarray, n_pad: int) -> jnp.ndarray:
     """Pad (np, 3, 4) matrices to n_pad rows by repeating the last one
     (a valid geometry: no 1/z poles — pairs with zero-image padding)."""
@@ -294,13 +355,29 @@ class PlanExecutor:
     tiles never retrace. The loop ORDER follows ``plan.schedule``:
     step-major scanned device accumulators by default, the chunk-major
     PR-2 loop on request.
+
+    ``pipeline`` selects the step-major flush discipline: ``"sync"``
+    (the PR-3 in-thread double buffer — flush step N-1 after
+    dispatching step N) or ``"async"`` (a :class:`_AsyncFlushQueue`
+    flusher thread: step N's device->host accumulator copy overlaps
+    step N+1's scan dispatch, ``jax.block_until_ready`` only at
+    dequeue). Async only changes WHEN host adds happen, never their
+    FIFO order, so output is bit-identical; it engages on host-placed
+    step-major walks and is a no-op elsewhere. ``pipeline_depth``
+    bounds the in-flight step outputs (2 = double buffered).
     """
 
     def __init__(self, geom: CTGeometry, plan: ReconPlan,
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None, *,
+                 pipeline: str = "sync", pipeline_depth: int = 2):
+        if pipeline not in ("sync", "async"):
+            raise ValueError(
+                f"pipeline must be 'sync' or 'async', got {pipeline!r}")
         self.geom = geom
         self.plan = plan
         self.cache = cache if cache is not None else default_program_cache()
+        self.pipeline = pipeline
+        self.pipeline_depth = int(pipeline_depth)
 
     # ---- compile-stage access -------------------------------------------
 
@@ -405,9 +482,24 @@ class PlanExecutor:
         ``img_s``/``mat_s`` are the stacked scan grids ``(n_chunks,
         chunk_size, ...)``. Total device->host volume traffic is O(vol)
         — each voxel crosses once — and dispatches are O(n_steps).
+        Host flushes follow ``self.pipeline``: in-thread double buffer
+        (``"sync"``) or the :class:`_AsyncFlushQueue` flusher thread
+        (``"async"`` — the dispatcher never blocks on a copy).
         """
         plan = self.plan
         host = plan.out == "host"
+        if host and self.pipeline == "async":
+            flush = _AsyncFlushQueue(vol, depth=self.pipeline_depth)
+            try:
+                for work in sched.steps:
+                    step = work.step
+                    prog = self._scan_program(step.variant, step.call_shape,
+                                              sched)
+                    out = prog(img_s, self._translated(mat_s, step))
+                    flush.put(self._step_writes(step, out))
+            finally:
+                flush.close()
+            return vol
         pending = ()
         for work in sched.steps:
             step = work.step

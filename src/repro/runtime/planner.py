@@ -170,6 +170,10 @@ class ReconPlan:
     for bounded-device-memory streaming and as the parity oracle).
     ``options`` holds the validated extra kernel options (already
     filtered to what the requested variant's KernelSpec accepts).
+
+    The plan is hashable (a frozen dataclass of hashable fields), so it
+    can key caches directly; :attr:`bucket_key` is the compact identity
+    the serving layer buckets on.
     """
 
     vol_shape_xyz: Tuple[int, int, int]
@@ -216,6 +220,22 @@ class ReconPlan:
         for s in self.steps:
             seen.setdefault((s.variant, s.call_shape))
         return tuple(seen)
+
+    @property
+    def bucket_key(self) -> Tuple:
+        """Hashable request-shape identity for the serving layer.
+
+        Two requests with equal bucket keys plan identical schedules
+        and hit the same compiled programs, so ``runtime/service.py``
+        buckets on ``(geometry, plan.bucket_key)``. The derived
+        ``steps``/``chunks`` are deterministic functions of these
+        fields, so they are deliberately excluded — the key stays a
+        flat tuple of scalars/short tuples.
+        """
+        return (self.vol_shape_xyz, self.det_shape_wh, self.variant,
+                self.tile_shape, self.nb, self.n_proj, self.n_proj_padded,
+                self.chunk_size, self.out, self.interpret, self.options,
+                self.schedule)
 
     @property
     def working_set_bytes(self) -> int:

@@ -1,0 +1,302 @@
+"""Reconstruction serving layer: shape-bucketed requests over the
+plan/compile/execute core.
+
+iFDK (arXiv:1909.02724) frames the end-game for CPU back-projection as
+instant reconstruction as a *service*; the repo's last two PRs built
+exactly the substrate that makes that cheap — a pure, hashable
+:class:`~repro.runtime.planner.ReconPlan` and a process-shared
+:class:`~repro.runtime.executor.ProgramCache` keyed so repeated
+same-shape work never retraces. :class:`ReconService` is the layer that
+exploits it:
+
+  * **shape bucketing** — every request (geometry + projections +
+    façade options) is planned (pure, microseconds) and bucketed on
+    ``(geometry, plan.bucket_key)``. The first request into a bucket
+    builds its :class:`~repro.runtime.executor.PlanExecutor` and
+    pre-compiles every program the plan needs (``PlanExecutor.warm``);
+    every later same-shape request reuses them — zero new compiles, by
+    construction and by test (tests/test_service.py).
+  * **warmup** — ``warmup(geometries, **options)`` drives the same
+    bucket-creation path without data, so a deployment can pay all
+    compilation before the first real request arrives.
+  * **async step pipeline** — bucket executors default to
+    ``pipeline="async"``: a depth-bounded flusher thread overlaps each
+    step's device->host accumulator copy with the next step's scan
+    dispatch (``runtime.executor._AsyncFlushQueue``), with output
+    bit-identical to the sequential flush.
+  * **bounded, fair execution** — requests enter ONE FIFO queue and are
+    drained by ``max_inflight`` worker threads: admission order is
+    completion-start order (no shape starves another), and at most
+    ``max_inflight`` reconstructions hold device memory at once.
+  * **introspection** — ``stats()`` returns a :class:`ServiceStats`
+    snapshot: per-bucket request/hit/miss/compile counts plus the
+    shared ProgramCache totals (the same numbers bench_smoke surfaces
+    in the BENCH_*.json meta block).
+
+Usage
+-----
+    from repro.runtime.service import ReconService
+
+    svc = ReconService(max_inflight=2)
+    svc.warmup([geom_a, geom_b], variant="algorithm1_mp",
+               tiling=(32, 32, 64), proj_batch=32)     # pay compiles now
+
+    h = svc.submit(projections, geom_a, variant="algorithm1_mp",
+                   tiling=(32, 32, 64), proj_batch=32)  # non-blocking
+    vol = h.result()                                    # (nz, ny, nx)
+
+    vol = svc.reconstruct(projections, geom_b)          # synchronous
+    print(svc.stats())                                  # buckets + cache
+    svc.close()
+
+``fdk_reconstruct(..., service=svc)`` routes the façade through the
+same buckets, so existing call sites join the serving path unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.fdk import _build_plan
+from repro.core.geometry import CTGeometry
+from repro.runtime.executor import PlanExecutor, ProgramCache, \
+    default_program_cache
+from repro.runtime.planner import ReconPlan
+
+
+# --------------------------------------------------------------------------
+# Stats snapshots (immutable — safe to hand out across threads)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketStats:
+    """One shape bucket's counters at snapshot time.
+
+    ``misses`` is 1 for every live bucket (its creation); ``hits`` are
+    the requests that reused it; ``programs_built`` is how many jit
+    programs its warm-up compiled (0 when another bucket already
+    populated the shared cache with the same program keys).
+    """
+
+    variant: str
+    vol_shape_xyz: Tuple[int, int, int]
+    n_proj: int
+    schedule: str
+    requests: int
+    hits: int
+    misses: int
+    programs_built: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceStats:
+    """Whole-service snapshot: totals + per-bucket rows + cache stats."""
+
+    requests: int
+    bucket_hits: int
+    bucket_misses: int
+    buckets: Tuple[BucketStats, ...]
+    cache: Dict[str, int]
+    max_inflight: int
+    queued: int
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.bucket_hits + self.bucket_misses
+        return self.bucket_hits / total if total else 0.0
+
+
+class _Bucket:
+    """A cached (geometry, plan) pair: executor + per-bucket counters."""
+
+    def __init__(self, geom: CTGeometry, plan: ReconPlan,
+                 executor: PlanExecutor, programs_built: int):
+        self.geom = geom
+        self.plan = plan
+        self.executor = executor
+        self.programs_built = programs_built
+        self.requests = 0
+        self.hits = 0
+
+    def snapshot(self) -> BucketStats:
+        return BucketStats(
+            variant=self.plan.variant,
+            vol_shape_xyz=self.plan.vol_shape_xyz,
+            n_proj=self.plan.n_proj,
+            schedule=self.plan.schedule,
+            requests=self.requests,
+            hits=self.hits,
+            misses=1,
+            programs_built=self.programs_built)
+
+
+# --------------------------------------------------------------------------
+# The service
+# --------------------------------------------------------------------------
+
+class ReconService:
+    """Shape-bucketed reconstruction server over the shared ProgramCache.
+
+    Parameters
+    ----------
+    max_inflight : worker-thread count == the bound on concurrently
+        executing reconstructions (each holds at most one tile
+        accumulator + the pipelined flush buffers on device). Requests
+        beyond it wait in the FIFO queue — admission order is start
+        order, so mixed-shape traffic shares the service fairly.
+    pipeline : step-major flush discipline for bucket executors
+        ("async" by default — the serving layer is exactly the caller
+        that benefits from overlap; "sync" restores the in-thread
+        double buffer).
+    cache : optional private :class:`ProgramCache`; default is the
+        process-shared one, so the service inherits programs compiled
+        by any earlier façade call (and vice versa).
+    """
+
+    def __init__(self, *, max_inflight: int = 2, pipeline: str = "async",
+                 cache: Optional[ProgramCache] = None):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.cache = cache if cache is not None else default_program_cache()
+        self.pipeline = pipeline
+        self.max_inflight = int(max_inflight)
+        self._buckets: Dict[tuple, _Bucket] = {}
+        self._lock = threading.Lock()          # buckets + counters
+        self._queue: "queue.Queue" = queue.Queue()
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker, name=f"recon-serve-{i}",
+                             daemon=True)
+            for i in range(self.max_inflight)]
+        for t in self._workers:
+            t.start()
+
+    # ---- bucketing -------------------------------------------------------
+
+    def _plan(self, geom: CTGeometry, options: Dict) -> ReconPlan:
+        """Façade options -> plan (pure; validation errors raise here,
+        in the submitting thread, not in a worker)."""
+        opts = dict(options)
+        return _build_plan(
+            geom, opts.pop("variant", "algorithm1_mp"),
+            nb=opts.pop("nb", 8), interpret=opts.pop("interpret", True),
+            tiling=opts.pop("tiling", None),
+            memory_budget=opts.pop("memory_budget", None),
+            proj_batch=opts.pop("proj_batch", None),
+            out=opts.pop("out", None), schedule=opts.pop("schedule", None),
+            **opts)
+
+    def _bucket(self, geom: CTGeometry, plan: ReconPlan) -> _Bucket:
+        """Find-or-create the bucket for ``(geom, plan.bucket_key)``.
+
+        Creation happens under the service lock so the warm-up compile
+        count is attributable to THIS bucket even with concurrent
+        workers: the cache-miss delta across ``PlanExecutor.warm`` is
+        the bucket's ``programs_built``.
+        """
+        key = (geom, plan.bucket_key)
+        with self._lock:
+            bucket = self._buckets.get(key)
+            if bucket is not None:
+                bucket.hits += 1
+                return bucket
+            misses_before = self.cache.stats()["misses"]
+            ex = PlanExecutor(geom, plan, cache=self.cache,
+                              pipeline=self.pipeline)
+            ex.warm()
+            built = self.cache.stats()["misses"] - misses_before
+            bucket = _Bucket(geom, plan, ex, programs_built=built)
+            self._buckets[key] = bucket
+            return bucket
+
+    def warmup(self, geometries: Iterable[CTGeometry],
+               **options) -> ServiceStats:
+        """Pre-compile the buckets a deployment will serve.
+
+        One bucket per geometry, same options for all (call repeatedly
+        for mixed option sets). After warmup, the first real request of
+        each warmed shape is a bucket hit with zero new compiles.
+        """
+        for geom in geometries:
+            self._bucket(geom, self._plan(geom, options))
+        return self.stats()
+
+    # ---- request path ----------------------------------------------------
+
+    def submit(self, projections: jnp.ndarray, geom: CTGeometry,
+               **options) -> "Future":
+        """Enqueue one reconstruction; returns a ``Future`` whose
+        ``result()`` is the volume (same contract as the façade the
+        options mirror — ``fdk_reconstruct``). FIFO across callers."""
+        plan = self._plan(geom, options)   # validate in the caller
+        fut: Future = Future()
+        # the closed check and the enqueue are atomic under the lock so
+        # a request can never land behind close()'s worker sentinels
+        # (its future would hang with no consumer left)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ReconService is closed")
+            self._queue.put((fut, projections, geom, plan))
+        return fut
+
+    def reconstruct(self, projections: jnp.ndarray, geom: CTGeometry,
+                    **options):
+        """Synchronous request: ``submit(...).result()``."""
+        return self.submit(projections, geom, **options).result()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._queue.get()
+            try:
+                if item is None:
+                    return
+                fut, projections, geom, plan = item
+                if not fut.set_running_or_notify_cancel():
+                    continue
+                try:
+                    bucket = self._bucket(geom, plan)
+                    with self._lock:
+                        bucket.requests += 1
+                    fut.set_result(bucket.executor.reconstruct(projections))
+                except BaseException as exc:
+                    fut.set_exception(exc)
+            finally:
+                self._queue.task_done()
+
+    # ---- lifecycle / introspection ---------------------------------------
+
+    def stats(self) -> ServiceStats:
+        with self._lock:
+            buckets = tuple(b.snapshot() for b in self._buckets.values())
+        return ServiceStats(
+            requests=sum(b.requests for b in buckets),
+            bucket_hits=sum(b.hits for b in buckets),
+            bucket_misses=len(buckets),
+            buckets=buckets,
+            cache=self.cache.stats(),
+            max_inflight=self.max_inflight,
+            queued=self._queue.qsize())
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting requests; drain workers (idempotent)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            for _ in self._workers:
+                self._queue.put(None)
+        if wait:
+            for t in self._workers:
+                t.join()
+
+    def __enter__(self) -> "ReconService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,237 @@
+"""Serving layer (PR 4): ReconService buckets + the async step pipeline.
+
+Covers the serving seams the ISSUE pins down:
+  * cross-request ProgramCache reuse — two same-shape requests compile
+    exactly once (miss then hit), and warmup() moves every compile
+    ahead of the first request;
+  * mixed-shape isolation — the cache has no eviction, so interleaved
+    shape classes never recompile each other;
+  * async pipeline parity — ``pipeline="async"`` (flusher thread,
+    ``block_until_ready`` only at dequeue) is BIT-identical to the
+    sequential ``schedule="step"`` executor for >= 3 variants;
+  * FIFO fairness + bounded in-flight concurrency;
+  * the hashable ``ReconPlan.bucket_key`` the buckets are keyed on.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (fdk_reconstruct, standard_geometry,
+                        transpose_projections)
+from repro.runtime.executor import PlanExecutor, ProgramCache
+from repro.runtime.planner import plan_reconstruction
+from repro.runtime.service import ReconService
+
+from conftest import rel_rmse
+
+
+@pytest.fixture(scope="module")
+def setup():
+    geom = standard_geometry(n=16, n_det=24, n_proj=6)
+    rng = np.random.RandomState(3)
+    projs = jnp.asarray(rng.rand(geom.n_proj, geom.nh,
+                                 geom.nw).astype(np.float32))
+    return geom, projs
+
+
+OPTS = dict(variant="subline_batch_mp", nb=2, tiling=(8, 8, 16),
+            proj_batch=4)
+
+
+# ---- bucket_key -----------------------------------------------------------
+
+def test_plan_is_hashable_bucket_key(setup):
+    geom, _ = setup
+    a = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4)
+    b = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4)
+    assert a == b and hash(a) == hash(b)          # plan itself is a key
+    assert a.bucket_key == b.bucket_key
+    assert hash(a.bucket_key) == hash(b.bucket_key)
+    c = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=2)
+    assert c.bucket_key != a.bucket_key           # chunk grid differs
+    d = plan_reconstruction(geom, "share_mp", nb=2, proj_batch=4)
+    assert d.bucket_key != a.bucket_key           # variant differs
+
+
+# ---- cross-request ProgramCache reuse -------------------------------------
+
+def test_same_shape_requests_compile_once(setup):
+    """Two same-shape requests: miss then hit — the second request adds
+    ZERO cache misses (the acceptance cache-hit assertion)."""
+    geom, projs = setup
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        v1 = svc.reconstruct(projs, geom, **OPTS)
+        after_first = svc.stats()
+        assert after_first.bucket_misses == 1
+        assert after_first.cache["misses"] > 0    # the cold compiles
+        v2 = svc.reconstruct(projs, geom, **OPTS)
+        after_second = svc.stats()
+    assert after_second.cache["misses"] == after_first.cache["misses"]
+    assert after_second.bucket_hits == 1
+    assert after_second.cache["hits"] > after_first.cache["hits"]
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_warmup_precompiles_everything(setup):
+    """After warmup(geometries) the first REAL request is a bucket hit
+    with zero new programs built."""
+    geom, projs = setup
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        stats = svc.warmup([geom], **OPTS)
+        assert stats.bucket_misses == 1 and stats.cache["misses"] > 0
+        warmed = stats.cache["misses"]
+        svc.reconstruct(projs, geom, **OPTS)
+        stats = svc.stats()
+        assert stats.cache["misses"] == warmed    # no compile on request
+        assert stats.bucket_hits == 1
+        b = stats.buckets[0]
+        assert (b.requests, b.hits, b.programs_built) == (1, 1, warmed)
+
+
+def test_mixed_shapes_do_not_evict(setup):
+    """Interleaved shape classes keep their buckets AND their compiled
+    programs: re-requesting the first shape adds no cache misses."""
+    geom_a, projs_a = setup
+    geom_b = standard_geometry(n=8, n_det=12, n_proj=6)
+    rng = np.random.RandomState(4)
+    projs_b = jnp.asarray(rng.rand(geom_b.n_proj, geom_b.nh,
+                                   geom_b.nw).astype(np.float32))
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        svc.reconstruct(projs_a, geom_a, **OPTS)
+        svc.reconstruct(projs_b, geom_b, **OPTS)
+        both_cold = svc.stats().cache["misses"]
+        svc.reconstruct(projs_a, geom_a, **OPTS)   # back to shape A
+        svc.reconstruct(projs_b, geom_b, **OPTS)   # and shape B again
+        stats = svc.stats()
+    assert stats.cache["misses"] == both_cold
+    assert stats.bucket_misses == 2 and stats.bucket_hits == 2
+    assert {b.vol_shape_xyz for b in stats.buckets} == \
+        {(16, 16, 16), (8, 8, 8)}
+
+
+def test_facade_service_routing(setup):
+    """fdk_reconstruct(service=...) lands in the service's buckets and
+    matches the one-shot façade exactly."""
+    geom, projs = setup
+    ref = fdk_reconstruct(projs, geom, **OPTS)
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        via = fdk_reconstruct(projs, geom, service=svc, **OPTS)
+        assert svc.stats().bucket_misses == 1
+        fdk_reconstruct(projs, geom, service=svc, **OPTS)
+        assert svc.stats().bucket_hits == 1
+        # the service owns the flush discipline — combining is an error
+        with pytest.raises(ValueError, match="pipeline"):
+            fdk_reconstruct(projs, geom, service=svc, pipeline="sync",
+                            **OPTS)
+    assert rel_rmse(via, ref) < 1e-6
+
+
+# ---- async pipeline parity ------------------------------------------------
+
+@pytest.mark.parametrize("variant",
+                         ["algorithm1_mp", "subline_batch_mp", "share_mp",
+                          "symmetry_mp"])
+def test_async_pipeline_bit_identical(setup, variant):
+    """pipeline="async" only moves WHEN host adds happen, never their
+    FIFO order -> bit-identical to the sequential step-major executor
+    (>= 3 variants per the satellite; 4 here, symmetry included)."""
+    geom, projs = setup
+    plan = plan_reconstruction(geom, variant, nb=2, tile_shape=(8, 8, 16),
+                               proj_batch=4, out="host")
+    cache = ProgramCache()
+    seq = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="sync").reconstruct(projs)
+    pip = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="async").reconstruct(projs)
+    assert np.array_equal(np.asarray(seq), np.asarray(pip)), variant
+
+
+def test_async_backproject_parity(setup):
+    """The raw backproject path pipelines too (data-dependent chunks)."""
+    geom, projs = setup
+    img_t = transpose_projections(projs)
+    from repro.core.geometry import projection_matrices
+    mats = projection_matrices(geom)
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=2,
+                               tile_shape=(8, 8, 16), proj_batch=2,
+                               out="host")
+    cache = ProgramCache()
+    seq = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="sync").backproject(img_t, mats)
+    pip = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="async").backproject(img_t, mats)
+    assert np.array_equal(np.asarray(seq), np.asarray(pip))
+
+
+def test_pipeline_validation(setup):
+    geom, _ = setup
+    plan = plan_reconstruction(geom, "algorithm1_mp")
+    with pytest.raises(ValueError, match="pipeline"):
+        PlanExecutor(geom, plan, pipeline="turbo")
+
+
+# ---- FIFO fairness + bounded concurrency ----------------------------------
+
+def test_fifo_order_and_bounded_inflight(setup, monkeypatch):
+    """With max_inflight=1, requests START in submission order (FIFO
+    fairness across mixed shapes) and at most one executes at a time.
+    Execution order is spied on the worker side (PlanExecutor) — done-
+    callback order would race the result() wakeup."""
+    geom_a, projs_a = setup
+    geom_b = standard_geometry(n=8, n_det=12, n_proj=6)
+    rng = np.random.RandomState(5)
+    projs_b = jnp.asarray(rng.rand(geom_b.n_proj, geom_b.nh,
+                                   geom_b.nw).astype(np.float32))
+    order = []
+    real = PlanExecutor.reconstruct
+
+    def spy(self, projections):
+        order.append(id(projections))
+        return real(self, projections)
+
+    monkeypatch.setattr(PlanExecutor, "reconstruct", spy)
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        svc.warmup([geom_a, geom_b], **OPTS)
+        inputs, futs = [], []
+        for i in range(6):
+            g, p = ((geom_a, projs_a) if i % 2 == 0 else (geom_b, projs_b))
+            # distinct array object per request so id() tags submissions
+            p = p + 0
+            inputs.append(p)
+            futs.append(svc.submit(p, g, **OPTS))
+        for f in futs:
+            f.result()
+    assert order == [id(p) for p in inputs]
+
+
+def test_submit_validates_in_caller(setup):
+    """Bad options raise AT SUBMIT (planner validation), not in a
+    worker thread via the future."""
+    geom, projs = setup
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        with pytest.raises(ValueError, match="does not accept"):
+            svc.submit(projs, geom, variant="share_mp", bogus_option=1)
+        with pytest.raises(ValueError):
+            svc.submit(projs, geom, out="sideways")
+
+
+def test_worker_errors_surface_via_future(setup):
+    """Execution errors (wrong projection count) land in the future,
+    and the service keeps serving afterwards."""
+    geom, projs = setup
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        bad = svc.submit(projs[:3], geom, **OPTS)
+        with pytest.raises(ValueError, match="full scan"):
+            bad.result()
+        good = svc.submit(projs, geom, **OPTS)    # still alive
+        assert good.result().shape == (16, 16, 16)
+
+
+def test_closed_service_rejects(setup):
+    geom, projs = setup
+    svc = ReconService(max_inflight=1, cache=ProgramCache())
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(projs, geom, **OPTS)
