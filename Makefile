@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
-	bench-smoke bench-service
+	bench-smoke bench-service bench-autotune
 
 tier1:
 	tests/run_tier1.sh
@@ -22,6 +22,9 @@ bench-tiled:
 
 bench-service:                 # serving layer: cold/warm + overlap
 	$(PY) -m benchmarks.bench_service
+
+bench-autotune:                # measured per-hardware config search
+	$(PY) -m benchmarks.bench_autotune
 
 bench-smoke:                   # perf-trajectory snapshot (non-gating);
 	$(PY) -m benchmarks.bench_smoke --json auto \

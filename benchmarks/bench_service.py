@@ -11,18 +11,27 @@ Measures the two claims the serving layer (``runtime/service.py``) makes:
   2. **async overlap** — the ``pipeline="async"`` flusher thread
      overlaps step N's device->host accumulator copy with step N+1's
      scan dispatch. Emitted as ``service/pipeline_sync`` vs
-     ``service/pipeline_async`` with the sync/async wall ratio
-     (``overlap_gain`` > 1 means the stream helped; at smoke sizes the
-     flush is small, so treat this as a trajectory number, not a gate).
+     ``service/pipeline_async`` with the sync/async wall ratio.
+
+``overlap_gain`` alone is MISLEADING at smoke sizes: the per-step flush
+is a few hundred KB, so the copy the thread hides is microseconds while
+the thread+GIL handoff it adds is not — gains < 1 here say nothing
+about clinical sizes. Both pipeline rows therefore also report
+``flush_kb_per_step`` (the modeled device->host bytes each step emits —
+the quantity the overlap actually hides), and :func:`run_clinical`
+re-measures the pair at a clinical-scale volume where each step flushes
+hundreds of KB to MBs (opt-in: ``--clinical`` here, `pytest -m slow` in
+tier-1's slow lane — not smoke material).
 
 A mixed-shape burst at the end exercises bucketing under FIFO traffic
 and prints the :class:`ServiceStats` snapshot.
 
-    PYTHONPATH=src python -m benchmarks.bench_service
+    PYTHONPATH=src python -m benchmarks.bench_service [--clinical]
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -41,6 +50,31 @@ def _projs(geom, seed=0):
     rng = np.random.RandomState(seed)
     return jnp.asarray(
         rng.rand(geom.n_proj, geom.nh, geom.nw).astype(np.float32))
+
+
+def flush_bytes_per_step(plan) -> float:
+    """Modeled device->host bytes ONE step's flush emits (float32 tile
+    writes) — the traffic the async pipeline can actually hide."""
+    total = 4 * sum(s.ni * s.nj * sum(w.nk for w in s.writes)
+                    for s in plan.steps)
+    return total / max(1, len(plan.steps))
+
+
+def _pipeline_pair(geom, projs, plan, suffix: str = ""):
+    """Time sync vs async on one warmed plan; emit both rows with the
+    flush-bytes context that makes the ratio interpretable."""
+    cache = ProgramCache()
+    walls = {}
+    for pipeline in ("sync", "async"):
+        ex = PlanExecutor(geom, plan, cache=cache, pipeline=pipeline)
+        walls[pipeline] = common.time_fn(lambda: ex.reconstruct(projs))
+    gain = walls["sync"] / walls["async"]
+    kb = flush_bytes_per_step(plan) / 1024
+    common.emit(f"service/pipeline_sync{suffix}", walls["sync"] * 1e6,
+                f"steps={len(plan.steps)} flush_kb_per_step={kb:.1f}")
+    common.emit(f"service/pipeline_async{suffix}", walls["async"] * 1e6,
+                f"overlap_gain={gain:.2f}x flush_kb_per_step={kb:.1f}")
+    return gain, kb
 
 
 def run(n: int = 24, n_det: int = 32, n_proj: int = 16, nb: int = 4):
@@ -70,16 +104,10 @@ def run(n: int = 24, n_det: int = 32, n_proj: int = 16, nb: int = 4):
     plan = plan_reconstruction(geom, "algorithm1_mp", nb=nb,
                                tile_shape=(n // 2, n // 2, n),
                                proj_batch=max(nb, n_proj // 2), out="host")
-    cache = ProgramCache()
-    walls = {}
-    for pipeline in ("sync", "async"):
-        ex = PlanExecutor(geom, plan, cache=cache, pipeline=pipeline)
-        walls[pipeline] = common.time_fn(lambda: ex.reconstruct(projs))
-    gain = walls["sync"] / walls["async"]
-    common.emit("service/pipeline_sync", walls["sync"] * 1e6,
-                f"steps={len(plan.steps)}")
-    common.emit("service/pipeline_async", walls["async"] * 1e6,
-                f"overlap_gain={gain:.2f}x")
+    gain, kb = _pipeline_pair(geom, projs, plan)
+    print(f"# overlap_gain {gain:.2f}x at {kb:.1f} KB/step flush — "
+          f"smoke-size flushes are µs; see pipeline_*_clinical "
+          f"(--clinical / pytest -m slow) for the number that matters")
 
     # ---- mixed-shape FIFO burst ------------------------------------------
     geom_b = standard_geometry(n=max(8, n // 2), n_det=max(8, n_det // 2),
@@ -103,9 +131,33 @@ def run(n: int = 24, n_det: int = 32, n_proj: int = 16, nb: int = 4):
     svc.close()
 
 
-def main() -> None:
+def run_clinical(n: int = 96, n_det: int = 128, n_proj: int = 48,
+                 nb: int = 8) -> float:
+    """Clinical-scale sync-vs-async overlap (the satellite the smoke
+    number cannot answer): per-step flushes here are MBs, so the
+    flusher thread hides real copy time instead of µs. Returns the
+    overlap gain. Minutes of compile+run — slow lane only."""
+    geom = standard_geometry(n=n, n_det=n_det, n_proj=n_proj)
+    projs = _projs(geom)
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=nb,
+                               tile_shape=(n // 2, n // 2, n),
+                               proj_batch=max(nb, n_proj // 4), out="host")
+    gain, kb = _pipeline_pair(geom, projs, plan, suffix="_clinical")
+    print(f"# clinical overlap_gain {gain:.2f}x at {kb:.1f} KB/step")
+    return gain
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clinical", action="store_true",
+                    help="also run the clinical-size overlap measurement "
+                         "(minutes; slow lane)")
+    args = ap.parse_args(argv)
     common.reset_records()
     run()
+    if args.clinical:
+        print("# --- clinical size ---")
+        run_clinical()
 
 
 if __name__ == "__main__":

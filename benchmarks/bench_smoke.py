@@ -5,7 +5,10 @@ runs the optimization-ladder timing (``bench_variants``), the
 tiled-engine sweep (``bench_tiled``) — which now also times the
 step-major vs chunk-major executor schedules on multi-chunk streamed
 FDK — the serving-layer cold/warm + pipeline-overlap numbers
-(``bench_service``), and a bigger-size re-measure of the symmetry
+(``bench_service``), the bounded-budget autotune smoke
+(``bench_autotune`` — heuristic-vs-tuned wall + search cost; the
+winners persist in the tuning cache at ``$REPRO_TUNING_CACHE``, which
+CI uploads as an artifact), and a bigger-size re-measure of the symmetry
 family (the BENCH_PR2 ``symmetry_mp`` 0.48x number was part real
 regression — fixed by the affine-fold mirror in core/backproject.py —
 and part smoke-size dispatch noise, so the wall claim is re-checked
@@ -38,7 +41,8 @@ from repro.core import projection_matrices, standard_geometry, \
     transpose_projections
 from repro.core.variants import get_variant
 
-from . import bench_service, bench_tiled, bench_variants, common
+from . import bench_autotune, bench_service, bench_tiled, bench_variants, \
+    common
 
 # Smoke sizes: big enough that tiling/batching structure is exercised
 # (several tiles, several nb-batches), small enough for a CI stage.
@@ -129,6 +133,10 @@ def main(argv=None) -> None:
     ap.add_argument("--n-det", type=int, default=SMOKE["n_det"])
     ap.add_argument("--n-proj", type=int, default=SMOKE["n_proj"])
     ap.add_argument("--nb", type=int, default=SMOKE["nb"])
+    ap.add_argument("--autotune-budget", type=float, default=10.0,
+                    metavar="SEC",
+                    help="wall-clock budget for the bounded autotune "
+                         "smoke (tuning cache honors $REPRO_TUNING_CACHE)")
     args = ap.parse_args(argv)
     if args.json == "auto":
         args.json = next_snapshot_path()
@@ -141,6 +149,8 @@ def main(argv=None) -> None:
     bench_tiled.run(**sizes)
     print("# --- serving layer (smoke) ---")
     bench_service.run(**sizes)
+    print("# --- autotuner (bounded-budget smoke) ---")
+    bench_autotune.run(**sizes, budget_s=args.autotune_budget)
     print("# --- symmetry family (realistic size) ---")
     symmetry_recheck(**BIG)
     if args.json:

@@ -25,7 +25,8 @@ from .geometry import CTGeometry, projection_matrices
 def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
                 tiling, memory_budget: Optional[int],
                 proj_batch: Optional[int], out: Optional[str],
-                schedule: Optional[str] = None, **kernel_options):
+                schedule: Optional[str] = None, tuning=None,
+                **kernel_options):
     """Shared façade-to-planner translation (tiling= conventions)."""
     from repro.runtime.planner import plan_reconstruction
 
@@ -40,7 +41,7 @@ def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
     return plan_reconstruction(
         geom, variant, tile_shape=tile_shape, memory_budget=memory_budget,
         nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
-        schedule=schedule, **kernel_options)
+        schedule=schedule, tuning=tuning, **kernel_options)
 
 
 def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
@@ -52,6 +53,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     out: Optional[str] = None,
                     schedule: Optional[str] = None,
                     pipeline: Optional[str] = None,
+                    tuning=None,
                     service=None,
                     **kernel_options) -> jnp.ndarray:
     """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw).
@@ -76,10 +78,17 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
     planner picks "chunk" when a ``memory_budget`` bounds device bytes,
     "step" otherwise). All parameter validation happens in the planner.
 
-    ``pipeline`` selects the step-major flush discipline ("sync" —
-    the default — | "async" — a flusher thread overlaps each step's
-    device->host accumulator copy with the next step's scan dispatch;
-    bit-identical output). ``service`` routes the request through a
+    ``pipeline`` selects the host flush discipline ("sync" — the
+    default — | "async" — a flusher thread overlaps each unit's
+    device->host accumulator copy with the next unit's dispatch, in
+    every loop order; bit-identical output). ``variant="auto"`` (or an
+    explicit ``tuning=`` cache/path) resolves the whole configuration
+    — variant, schedule, pipeline, tile and chunk sizes — from the
+    measured autotuner's persisted winners for THIS hardware
+    (``runtime.autotune``; a cache miss falls back to exactly the
+    heuristics described above, and ``ReconService.warmup(tune=True)``
+    or ``runtime.autotune.autotune`` populate the cache). ``service``
+    routes the request through a
     :class:`repro.runtime.service.ReconService` instead of a one-shot
     executor: repeated same-shape calls land in the same bucket and
     reuse its cached plan + compiled programs (warm requests never
@@ -101,7 +110,24 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
             projections, geom, variant=variant, nb=nb, interpret=interpret,
             tiling=tiling, memory_budget=memory_budget,
             proj_batch=proj_batch, out=out, schedule=schedule,
-            **kernel_options)
+            tuning=tuning, **kernel_options)
+    if variant == "auto" or tuning is not None:
+        # lookup-only tuned resolution: the config also carries the
+        # executor-level pipeline knobs the plan cannot
+        from repro.runtime.autotune import as_tuning_cache, resolve_config
+        cfg = resolve_config(
+            geom, variant, cache=as_tuning_cache(tuning), nb=nb,
+            interpret=interpret, tiling=tiling,
+            memory_budget=memory_budget, proj_batch=proj_batch, out=out,
+            schedule=schedule, **kernel_options)
+        if pipeline is None:
+            ex = PlanExecutor.from_config(geom, cfg)
+        else:                         # explicit override beats the cache
+            ex = PlanExecutor(geom, cfg.build_plan(geom),
+                              pipeline=pipeline,
+                              pipeline_depth=cfg.pipeline_depth,
+                              tuned=cfg)
+        return ex.reconstruct(projections)
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
                        proj_batch=proj_batch, out=out, schedule=schedule,

@@ -144,6 +144,13 @@ class KernelSpec:
         (the paper's O1 loop order + O3 locality carried INTO the
         kernel). The planner defaults the ``proj_loop`` option ON for
         specs that advertise it.
+    tuning_space : the option axes the autotuner (``runtime.autotune``)
+        may flip when it searches this kernel's configuration space,
+        as ``((option, (candidate values, ...)), ...)``. Declarative for
+        the same reason ``options`` is: the tuner never guesses which
+        knobs a kernel takes — the spec advertises them (every key must
+        be in ``options``). Heuristic defaults stay with the planner;
+        this only widens the MEASURED search.
     """
 
     name: str
@@ -154,6 +161,7 @@ class KernelSpec:
     backend: str = "jax"
     jittable: bool = True
     proj_loop: bool = False
+    tuning_space: Tuple[Tuple[str, Tuple], ...] = ()
 
     @property
     def uses_symmetry(self) -> bool:
@@ -171,6 +179,12 @@ class KernelSpec:
 
 
 _PL_OPTS = frozenset({"nb", "interpret", "block", "proj_loop"})
+
+# Pallas kernels expose the fused in-kernel projection loop as a measured
+# tuning axis: the planner defaults it ON, but whether it beats the
+# per-batch launch depends on the machine (VMEM vs dispatch cost) — which
+# is exactly what runtime.autotune measures instead of guessing.
+_PL_TUNING = (("proj_loop", (True, False)),)
 
 REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
     KernelSpec("baseline", _baseline_adapter, (), backend="reference"),
@@ -192,13 +206,13 @@ REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
                 "localmem", "prefetch"),
                options=_PL_OPTS,
                slab_safe_fallback="subline_batch_mp", backend="pallas",
-               proj_loop=True),
+               proj_loop=True, tuning_space=_PL_TUNING),
     KernelSpec("onehot_pl", _onehot_pallas,
                ("transpose", "share", "symmetry", "subline", "batch",
                 "localmem", "prefetch", "mxu-interp"),
                options=_PL_OPTS | {"k_chunk"},
                slab_safe_fallback="subline_batch_mp", backend="pallas",
-               proj_loop=True),
+               proj_loop=True, tuning_space=_PL_TUNING),
     # jittable=False: the band schedule is computed from concrete matrix
     # values at trace time (np.asarray(mat) in the kernel wrapper)
     KernelSpec("banded_pl", _banded_pallas,
@@ -206,7 +220,7 @@ REGISTRY: Dict[str, KernelSpec] = {s.name: s for s in (
                 "localmem", "prefetch", "banded-prefetch"),
                options=_PL_OPTS | {"bw"},
                slab_safe_fallback="subline_batch_mp", backend="pallas",
-               jittable=False, proj_loop=True),
+               jittable=False, proj_loop=True, tuning_space=_PL_TUNING),
 )}
 
 
@@ -234,6 +248,11 @@ def _validate_registry() -> None:
             raise ValueError(
                 f"{spec.name!r} advertises proj_loop but does not accept "
                 f"the 'proj_loop' call option")
+        bad = [k for k, _ in spec.tuning_space if k not in spec.options]
+        if bad:
+            raise ValueError(
+                f"{spec.name!r} tuning_space keys {bad} are not accepted "
+                f"call options (KernelSpec.options)")
 
 
 _validate_registry()

@@ -1,3 +1,6 @@
+# NOTE: the autotune FUNCTION is deliberately not re-exported here —
+# it would shadow the `repro.runtime.autotune` submodule attribute
+from .autotune import TunedConfig, TuningCache, resolve_config  # noqa: F401
 from .fault_tolerance import FaultTolerantLoop, Heartbeat  # noqa: F401
 from .elastic import remesh_plan, reshard_tree  # noqa: F401
 from .engine import TiledReconstructor  # noqa: F401

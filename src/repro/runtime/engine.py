@@ -121,12 +121,14 @@ class TiledReconstructor:
                  cache: Optional[ProgramCache] = None,
                  **kernel_options):
         self.geom = geom
-        self.variant = variant
         self.recon_plan: ReconPlan = plan_reconstruction(
             geom, variant, tile_shape=tile_shape,
             memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
             out=out, interpret=interpret, schedule=schedule,
             **kernel_options)
+        # variant="auto" resolves through the tuning cache in the
+        # planner; record the resolved name for introspection
+        self.variant = self.recon_plan.variant
         self._executor = PlanExecutor(geom, self.recon_plan, cache=cache,
                                       pipeline=pipeline)
 
@@ -195,14 +197,18 @@ class TiledReconstructor:
 
     def backproject_distributed(self, img_t: jnp.ndarray, mats: jnp.ndarray,
                                 mesh, *, nb: Optional[int] = None,
-                                dist_variant: str = "scan"):
+                                dist_variant: str = "scan",
+                                pipeline: Optional[str] = None):
         """Compose tiles with the data/model/pod mesh of core.distributed.
 
         Each (i, j)-tile (full Z — the mesh shards i/j, slabs stay whole)
         runs the shard_map program with the tile origin as a call-time
         argument: ONE cached program per distinct tile shape. Projection
-        batches follow the plan's chunk schedule (tail padded). Returns
-        vol_t (nx, ny, nz) on host.
+        batches follow the plan's chunk schedule (tail padded).
+        ``pipeline`` ("sync" | "async"; default: this engine's own
+        discipline) streams tile flushes through the
+        ``_AsyncFlushQueue`` flusher thread exactly like the local
+        executor. Returns vol_t (nx, ny, nz) on host.
         """
         nb = self.recon_plan.nb if nb is None else int(nb)
         # the mesh program consumes exactly-nb batches: plan chunks at nb
@@ -210,6 +216,10 @@ class TiledReconstructor:
             self.geom, self.variant, tile_shape=self.recon_plan.tile_shape,
             nb=nb, proj_batch=nb, out="host",
             interpret=self.recon_plan.interpret)
-        ex = PlanExecutor(self.geom, plan, cache=self._executor.cache)
+        ex = PlanExecutor(
+            self.geom, plan, cache=self._executor.cache,
+            pipeline=self._executor.pipeline if pipeline is None
+            else pipeline,
+            pipeline_depth=self._executor.pipeline_depth)
         return ex.execute_distributed(img_t, mats, mesh,
                                       dist_variant=dist_variant)

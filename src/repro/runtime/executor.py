@@ -31,12 +31,16 @@ this module turns it into arrays:
     output-side double-buffered in both orders: the ``np.asarray``
     device->host copy of step ``n`` is issued only after step ``n+1``'s
     programs have been dispatched. ``pipeline="async"`` upgrades the
-    step-major flush to a real stream — a depth-bounded
+    host flush to a real stream in EVERY loop order — step-major,
+    chunk-major, and the distributed tile walk: a depth-bounded
     :class:`_AsyncFlushQueue` flusher thread performs the
     ``block_until_ready`` + host accumulate off the dispatch thread, so
-    step N's device->host copy genuinely overlaps step N+1's scan
-    dispatch (the serving layer, ``runtime/service.py``, runs this by
-    default).
+    unit N's device->host copy genuinely overlaps unit N+1's dispatch
+    (the serving layer, ``runtime/service.py``, runs this by default).
+    The executor can also be built straight from an autotuned winner:
+    :meth:`PlanExecutor.from_config` consumes a
+    ``runtime.autotune.TunedConfig`` (the measured per-hardware choice
+    of schedule/pipeline/variant/tile/chunk knobs).
 """
 
 from __future__ import annotations
@@ -369,7 +373,8 @@ class PlanExecutor:
 
     def __init__(self, geom: CTGeometry, plan: ReconPlan,
                  cache: Optional[ProgramCache] = None, *,
-                 pipeline: str = "sync", pipeline_depth: int = 2):
+                 pipeline: str = "sync", pipeline_depth: int = 2,
+                 tuned=None):
         if pipeline not in ("sync", "async"):
             raise ValueError(
                 f"pipeline must be 'sync' or 'async', got {pipeline!r}")
@@ -378,6 +383,17 @@ class PlanExecutor:
         self.cache = cache if cache is not None else default_program_cache()
         self.pipeline = pipeline
         self.pipeline_depth = int(pipeline_depth)
+        self.tuned = tuned    # TunedConfig provenance, None = heuristic
+
+    @classmethod
+    def from_config(cls, geom: CTGeometry, config,
+                    cache: Optional[ProgramCache] = None) -> "PlanExecutor":
+        """Executor for a resolved ``runtime.autotune.TunedConfig``: the
+        config plans itself (pure) and carries the executor-level knobs
+        (``pipeline``/``pipeline_depth``) the plan cannot."""
+        return cls(geom, config.build_plan(geom), cache=cache,
+                   pipeline=config.pipeline,
+                   pipeline_depth=config.pipeline_depth, tuned=config)
 
     # ---- compile-stage access -------------------------------------------
 
@@ -447,9 +463,23 @@ class PlanExecutor:
         return tuple(((isl, jsl, slice(w.k0, w.k0 + w.nk)),
                       out[..., w.lo:w.hi]) for w in step.writes)
 
+    def _open_flush(self, vol) -> Optional[_AsyncFlushQueue]:
+        """The async flusher when this walk pipelines host flushes
+        (``pipeline="async"`` + host placement), else None."""
+        if self.pipeline == "async" and self.plan.out == "host":
+            return _AsyncFlushQueue(vol, depth=self.pipeline_depth)
+        return None
+
     def _backproject_chunk(self, vol, img_c: jnp.ndarray,
-                           mat_c: jnp.ndarray):
-        """Chunk-major: accumulate ONE projection chunk, all steps."""
+                           mat_c: jnp.ndarray,
+                           flush: Optional[_AsyncFlushQueue] = None):
+        """Chunk-major: accumulate ONE projection chunk, all steps.
+
+        ``flush`` (an open :class:`_AsyncFlushQueue` spanning the whole
+        chunk loop) moves the host adds onto the flusher thread; enqueue
+        order equals the sequential flush order, and float addition is
+        performed in that same order, so output stays bit-identical.
+        """
         plan = self.plan
         host = plan.out == "host"
         pending = ()   # previous step's (slices, device piece) writes
@@ -457,18 +487,20 @@ class PlanExecutor:
             prog = self._program(step.variant, step.call_shape)
             out = prog(img_c, self._translated(mat_c, step))
             cur = self._step_writes(step, out)
-            if host:
+            if not host:
+                for (i_s, j_s, k_s), piece in cur:
+                    idx = jnp.asarray([i_s.start, j_s.start, k_s.start],
+                                      jnp.int32)
+                    vol = _place_device_add(vol, piece, idx)
+            elif flush is not None:
+                flush.put(cur)
+            else:
                 # double buffer: flush step n-1's device->host copies
                 # only after step n's programs are dispatched, so the
                 # copy overlaps compute (async dispatch)
                 for sl, piece in pending:
                     vol[sl] += np.asarray(piece)
                 pending = cur
-            else:
-                for (i_s, j_s, k_s), piece in cur:
-                    idx = jnp.asarray([i_s.start, j_s.start, k_s.start],
-                                      jnp.int32)
-                    vol = _place_device_add(vol, piece, idx)
         for sl, piece in pending:
             vol[sl] += np.asarray(piece)
         return vol
@@ -555,8 +587,14 @@ class PlanExecutor:
                 acc = part if acc is None else acc + part
             return acc
         vol = self._alloc()
-        for s0, s1 in chunks:
-            vol = self._backproject_chunk(vol, img_p[s0:s1], mat_p[s0:s1])
+        flush = self._open_flush(vol)
+        try:
+            for s0, s1 in chunks:
+                vol = self._backproject_chunk(vol, img_p[s0:s1],
+                                              mat_p[s0:s1], flush=flush)
+        finally:
+            if flush is not None:
+                flush.close()
         return vol
 
     def backproject_tile(self, img_t: jnp.ndarray, mats: jnp.ndarray,
@@ -643,11 +681,17 @@ class PlanExecutor:
             return bp.volume_to_native(acc)
         else:
             vol = self._alloc()
-            for c in range(len(plan.chunks)):
-                img_c, mat_c = producer.get(c)
-                producer.prefetch(c + 1)   # overlaps this chunk's compute
-                vol = self._backproject_chunk(vol, img_c, mat_c)
-                producer.drop(c)
+            flush = self._open_flush(vol)
+            try:
+                for c in range(len(plan.chunks)):
+                    img_c, mat_c = producer.get(c)
+                    producer.prefetch(c + 1)  # overlaps this chunk's compute
+                    vol = self._backproject_chunk(vol, img_c, mat_c,
+                                                  flush=flush)
+                    producer.drop(c)
+            finally:
+                if flush is not None:
+                    flush.close()
         if isinstance(vol, np.ndarray):
             # out="host": the accumulator may exceed device memory —
             # transpose is a free numpy view, never round-trip it
@@ -665,7 +709,12 @@ class PlanExecutor:
         a call-time argument — ONE program per distinct tile shape,
         cached in the shared ProgramCache, so interior tiles and
         repeated calls reuse it. Projection chunks follow the plan's
-        schedule. Returns vol_t (nx, ny, nz) on host.
+        schedule. ``pipeline="async"`` streams here too: tile N's
+        device->host copy (behind its ``block_until_ready``) runs on
+        the flusher thread while tile N+1's shard_map programs are
+        dispatched; tiles write disjoint regions of the zeroed volume,
+        so the flusher's accumulate equals the sequential assignment.
+        Returns vol_t (nx, ny, nz) on host.
         """
         from repro.core.distributed import make_distributed_bp
 
@@ -678,19 +727,32 @@ class PlanExecutor:
         nx, ny, nz = plan.vol_shape_xyz
         ti, tj, _ = plan.tile_shape
         vol = np.zeros((nx, ny, nz), np.float32)
-        for tile in make_tiles((nx, ny, nz), (ti, tj, nz)):
-            # geom and mesh are both hashable (frozen dataclass / jax
-            # Mesh): keying on their VALUES makes equal setups share the
-            # program and distinct geometries never collide
-            key = ("dist", dist_variant, tile.shape, nb, self.geom, mesh)
-            prog = self.cache.get_or_build(
-                key, lambda shape=tile.shape: make_distributed_bp(
-                    self.geom, mesh, nb=nb, variant=dist_variant,
-                    vol_shape_xyz=shape)[0])
-            origin = jnp.asarray([tile.i0, tile.j0], jnp.float32)
-            acc = None
-            for s0, s1 in chunks:
-                part = prog(img_p[s0:s1], mat_p[s0:s1], origin)
-                acc = part if acc is None else acc + part
-            vol[tile.slices] = np.asarray(acc)[:tile.ni, :tile.nj]
+        flush = (_AsyncFlushQueue(vol, depth=self.pipeline_depth)
+                 if self.pipeline == "async" else None)
+        try:
+            for tile in make_tiles((nx, ny, nz), (ti, tj, nz)):
+                # geom and mesh are both hashable (frozen dataclass /
+                # jax Mesh): keying on their VALUES makes equal setups
+                # share the program and distinct geometries never
+                # collide
+                key = ("dist", dist_variant, tile.shape, nb, self.geom,
+                       mesh)
+                prog = self.cache.get_or_build(
+                    key, lambda shape=tile.shape: make_distributed_bp(
+                        self.geom, mesh, nb=nb, variant=dist_variant,
+                        vol_shape_xyz=shape)[0])
+                origin = jnp.asarray([tile.i0, tile.j0], jnp.float32)
+                acc = None
+                for s0, s1 in chunks:
+                    part = prog(img_p[s0:s1], mat_p[s0:s1], origin)
+                    acc = part if acc is None else acc + part
+                if flush is not None:
+                    # unpad on device (lazy slice); the zeroed volume
+                    # makes the flusher's += equal the assignment
+                    flush.put(((tile.slices, acc[:tile.ni, :tile.nj]),))
+                else:
+                    vol[tile.slices] = np.asarray(acc)[:tile.ni, :tile.nj]
+        finally:
+            if flush is not None:
+                flush.close()
         return vol

@@ -307,6 +307,7 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
                         out: str = "host",
                         interpret: bool = True,
                         schedule: Optional[str] = None,
+                        tuning=None,
                         **kernel_options) -> ReconPlan:
     """Build the :class:`ReconPlan` every entry point executes.
 
@@ -331,12 +332,29 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         ``memory_budget`` — the caller's byte-bound contract — resolves
         to "chunk" (whose residency the per-call working-set model
         soundly describes); everything else resolves to "step".
+    tuning : opt-in to the measured autotuner's persisted winners
+        (``runtime.autotune``): a ``TuningCache``, a cache-file path,
+        or None. With ``variant="auto"`` (or any non-None ``tuning``)
+        the plan is resolved by LOOKUP against the tuning cache — a
+        persisted winner for this hardware fingerprint x request shape
+        replaces the heuristic knobs; a miss (or a missing/corrupt
+        cache file) falls back to exactly the heuristic plan this
+        function builds today. Planning never measures.
     kernel_options : extra per-variant knobs (e.g. ``block=``, ``bw=``),
         validated against the variant's ``KernelSpec.options``. The
         ``proj_loop`` fused in-kernel projection loop is resolved here
         per variant: defaulted ON for kernels whose KernelSpec
         advertises the capability, absent otherwise.
     """
+    if variant == "auto" or tuning is not None:
+        # lookup-only: the autotuner owns fingerprinting + the cache;
+        # imported lazily so the heuristic path stays jax-free
+        from repro.runtime.autotune import resolve_plan
+        return resolve_plan(
+            geom, variant=variant, tuning=tuning, tile_shape=tile_shape,
+            memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
+            out=out, interpret=interpret, schedule=schedule,
+            **kernel_options)
     spec = get_spec(variant)
     if out not in ("host", "device"):
         raise ValueError(f"out must be 'host' or 'device', got {out!r}")

@@ -28,10 +28,20 @@ exploits it:
     drained by ``max_inflight`` worker threads: admission order is
     completion-start order (no shape starves another), and at most
     ``max_inflight`` reconstructions hold device memory at once.
+  * **measured tuning** — ``warmup(..., tune=True)`` runs the
+    per-hardware autotuner (``runtime.autotune``) for each bucket
+    before traffic: persisted winners resolve with zero re-measurement,
+    fresh hardware pays a bounded search once, and every bucket's
+    ``ServiceStats`` row reports whether its configuration was tuned or
+    heuristic (``source``). ``variant="auto"`` requests resolve through
+    the same cache at plan time (lookup only).
   * **introspection** — ``stats()`` returns a :class:`ServiceStats`
     snapshot: per-bucket request/hit/miss/compile counts plus the
     shared ProgramCache totals (the same numbers bench_smoke surfaces
-    in the BENCH_*.json meta block).
+    in the BENCH_*.json meta block), and STREAMED latency accounting —
+    each completed request lands in its bucket's
+    :class:`LatencyHistogram` as it finishes, so per-bucket (and
+    merged) p50/p99/mean are live numbers, not poll-time samples.
 
 Usage
 -----
@@ -56,10 +66,12 @@ same buckets, so existing call sites join the serving path unchanged.
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import threading
+import time
 from concurrent.futures import Future
-from typing import Dict, Iterable, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -68,6 +80,77 @@ from repro.core.geometry import CTGeometry
 from repro.runtime.executor import PlanExecutor, ProgramCache, \
     default_program_cache
 from repro.runtime.planner import ReconPlan
+
+
+# --------------------------------------------------------------------------
+# Streamed latency accounting
+# --------------------------------------------------------------------------
+
+class LatencyHistogram:
+    """Streamed log-2 latency histogram (per bucket, O(1) memory).
+
+    Every completed request is recorded as it finishes — the histogram
+    IS the stream, not a poll-time sample — into geometric bins
+    ``[BASE_S * 2**i, BASE_S * 2**(i+1))``. Quantiles are read from the
+    cumulative counts with the bin's geometric center as the estimate
+    (resolution ~±41%, the standard trade for a fixed-size streamed
+    histogram). Thread-safe: workers record concurrently.
+    """
+
+    BASE_S = 50e-6          # bin 0 also absorbs anything faster
+    NBINS = 40              # 50 µs .. ~15 hours
+
+    def __init__(self):
+        self._counts = [0] * self.NBINS
+        self._count = 0
+        self._total_s = 0.0
+        self._lock = threading.Lock()
+
+    def record(self, seconds: float) -> None:
+        s = max(float(seconds), 0.0)
+        b = 0 if s < 2 * self.BASE_S else min(
+            self.NBINS - 1, int(math.log2(s / self.BASE_S)))
+        with self._lock:
+            self._counts[b] += 1
+            self._count += 1
+            self._total_s += s
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    def counts(self) -> List[int]:
+        with self._lock:
+            return list(self._counts)
+
+    def mean(self) -> Optional[float]:
+        with self._lock:
+            return self._total_s / self._count if self._count else None
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Approximate q-quantile in seconds (None while empty)."""
+        with self._lock:
+            if not self._count:
+                return None
+            target = max(1.0, q * self._count)
+            cum = 0
+            for i, c in enumerate(self._counts):
+                cum += c
+                if cum >= target:
+                    return self.BASE_S * (2.0 ** i) * math.sqrt(2.0)
+            return self.BASE_S * (2.0 ** (self.NBINS - 1))
+
+    @staticmethod
+    def merged(hists: Iterable["LatencyHistogram"]) -> "LatencyHistogram":
+        out = LatencyHistogram()
+        for h in hists:
+            with h._lock:
+                for i, c in enumerate(h._counts):
+                    out._counts[i] += c
+                out._count += h._count
+                out._total_s += h._total_s
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -81,7 +164,13 @@ class BucketStats:
     ``misses`` is 1 for every live bucket (its creation); ``hits`` are
     the requests that reused it; ``programs_built`` is how many jit
     programs its warm-up compiled (0 when another bucket already
-    populated the shared cache with the same program keys).
+    populated the shared cache with the same program keys). ``source``
+    records how the bucket's configuration was chosen — "heuristic"
+    (the planner's static rules), "tuned-measured" (this process ran
+    the autotuner search), or "tuned-cache" (a persisted per-hardware
+    winner) — and ``pipeline`` the flush discipline that choice
+    resolved. ``completed``/``p50_ms``/``p99_ms``/``mean_ms`` stream
+    from the bucket's :class:`LatencyHistogram`.
     """
 
     variant: str
@@ -92,11 +181,20 @@ class BucketStats:
     hits: int
     misses: int
     programs_built: int
+    source: str = "heuristic"
+    pipeline: str = "async"
+    completed: int = 0
+    p50_ms: Optional[float] = None
+    p99_ms: Optional[float] = None
+    mean_ms: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class ServiceStats:
-    """Whole-service snapshot: totals + per-bucket rows + cache stats."""
+    """Whole-service snapshot: totals + per-bucket rows + cache stats.
+
+    ``p50_ms``/``p99_ms`` aggregate the per-bucket streamed histograms
+    (merged bin counts, not an average of quantiles)."""
 
     requests: int
     bucket_hits: int
@@ -105,6 +203,8 @@ class ServiceStats:
     cache: Dict[str, int]
     max_inflight: int
     queued: int
+    p50_ms: Optional[float] = None
+    p99_ms: Optional[float] = None
 
     @property
     def hit_rate(self) -> float:
@@ -112,15 +212,23 @@ class ServiceStats:
         return self.bucket_hits / total if total else 0.0
 
 
+def _ms(seconds: Optional[float]) -> Optional[float]:
+    return None if seconds is None else round(seconds * 1e3, 3)
+
+
 class _Bucket:
     """A cached (geometry, plan) pair: executor + per-bucket counters."""
 
     def __init__(self, geom: CTGeometry, plan: ReconPlan,
-                 executor: PlanExecutor, programs_built: int):
+                 executor: PlanExecutor, programs_built: int,
+                 config=None, source: str = "heuristic"):
         self.geom = geom
         self.plan = plan
         self.executor = executor
         self.programs_built = programs_built
+        self.config = config          # TunedConfig provenance (or None)
+        self.source = source
+        self.latency = LatencyHistogram()
         self.requests = 0
         self.hits = 0
 
@@ -133,7 +241,13 @@ class _Bucket:
             requests=self.requests,
             hits=self.hits,
             misses=1,
-            programs_built=self.programs_built)
+            programs_built=self.programs_built,
+            source=self.source,
+            pipeline=self.executor.pipeline,
+            completed=self.latency.count,
+            p50_ms=_ms(self.latency.quantile(0.50)),
+            p99_ms=_ms(self.latency.quantile(0.99)),
+            mean_ms=_ms(self.latency.mean()))
 
 
 # --------------------------------------------------------------------------
@@ -157,14 +271,20 @@ class ReconService:
     cache : optional private :class:`ProgramCache`; default is the
         process-shared one, so the service inherits programs compiled
         by any earlier façade call (and vice versa).
+    tuning : the autotuner's persisted-winner store consulted by
+        ``warmup(tune=True)`` and by ``variant="auto"`` requests — a
+        ``runtime.autotune.TuningCache``, a cache-file path, or None
+        (the default cache: ``$REPRO_TUNING_CACHE`` or
+        ``~/.cache/repro/tuning.json``).
     """
 
     def __init__(self, *, max_inflight: int = 2, pipeline: str = "async",
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None, tuning=None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.cache = cache if cache is not None else default_program_cache()
         self.pipeline = pipeline
+        self.tuning = tuning
         self.max_inflight = int(max_inflight)
         self._buckets: Dict[tuple, _Bucket] = {}
         self._lock = threading.Lock()          # buckets + counters
@@ -179,52 +299,136 @@ class ReconService:
 
     # ---- bucketing -------------------------------------------------------
 
-    def _plan(self, geom: CTGeometry, options: Dict) -> ReconPlan:
-        """Façade options -> plan (pure; validation errors raise here,
-        in the submitting thread, not in a worker)."""
+    def _tuning_cache(self, tuning=None):
+        from repro.runtime.autotune import as_tuning_cache
+        return as_tuning_cache(tuning if tuning is not None
+                               else self.tuning)
+
+    def _plan(self, geom: CTGeometry, options: Dict):
+        """Façade options -> (plan, TunedConfig-or-None) (pure;
+        validation errors raise here, in the submitting thread, not in
+        a worker). ``variant="auto"`` / ``tuning=`` resolve through the
+        tuning cache (lookup only — a miss is the heuristic config)."""
         opts = dict(options)
-        return _build_plan(
-            geom, opts.pop("variant", "algorithm1_mp"),
+        variant = opts.pop("variant", None)
+        tuning = opts.pop("tuning", None)
+        if tuning is None:
+            # ONE read (under the lock warmup(tune=True) writes under):
+            # both decisions below must see the same store, or a
+            # request racing a tuned warmup could resolve half-tuned
+            with self._lock:
+                tuning = self.tuning
+        if variant is None:
+            # a tuning-enabled service (constructed with tuning=, or
+            # warmed with tune=True) defaults requests to the tuned
+            # resolution so they land in the tuned buckets; otherwise
+            # keep the façade's heuristic default
+            variant = "auto" if tuning is not None else "algorithm1_mp"
+        kw = dict(
             nb=opts.pop("nb", 8), interpret=opts.pop("interpret", True),
             tiling=opts.pop("tiling", None),
             memory_budget=opts.pop("memory_budget", None),
             proj_batch=opts.pop("proj_batch", None),
-            out=opts.pop("out", None), schedule=opts.pop("schedule", None),
-            **opts)
+            out=opts.pop("out", None), schedule=opts.pop("schedule", None))
+        if variant == "auto" or tuning is not None:
+            from repro.runtime.autotune import resolve_config
+            cfg = resolve_config(geom, variant,
+                                 cache=self._tuning_cache(tuning),
+                                 **kw, **opts)
+            return cfg.build_plan(geom), cfg
+        return _build_plan(geom, variant, **kw, **opts), None
 
-    def _bucket(self, geom: CTGeometry, plan: ReconPlan) -> _Bucket:
+    @staticmethod
+    def _source_of(config) -> str:
+        if config is None or config.source == "heuristic":
+            return "heuristic"
+        return "tuned-" + config.source      # "measured" | "cache"
+
+    def _bucket(self, geom: CTGeometry, plan: ReconPlan,
+                config=None) -> _Bucket:
         """Find-or-create the bucket for ``(geom, plan.bucket_key)``.
 
         Creation happens under the service lock so the warm-up compile
         count is attributable to THIS bucket even with concurrent
         workers: the cache-miss delta across ``PlanExecutor.warm`` is
-        the bucket's ``programs_built``.
+        the bucket's ``programs_built``. ``config`` (a resolved
+        ``TunedConfig``) carries the tuned pipeline choice and the
+        choice provenance surfaced per bucket in :class:`ServiceStats`.
         """
         key = (geom, plan.bucket_key)
         with self._lock:
             bucket = self._buckets.get(key)
             if bucket is not None:
                 bucket.hits += 1
+                if config is not None and config.source != "heuristic" \
+                        and bucket.source == "heuristic":
+                    # a measured winner that differs only in executor-
+                    # level knobs (pipeline/depth — not part of the
+                    # bucket_key) lands on an existing heuristic
+                    # bucket: upgrade it in place rather than dropping
+                    # the tuned choice. In-flight requests finish on
+                    # the old executor (bit-identical output either
+                    # way); new requests get the tuned one.
+                    ex = PlanExecutor(
+                        geom, plan, cache=self.cache,
+                        pipeline=config.pipeline,
+                        pipeline_depth=config.pipeline_depth,
+                        tuned=config)
+                    ex.warm()
+                    bucket.executor = ex
+                    bucket.config = config
+                    bucket.source = self._source_of(config)
                 return bucket
             misses_before = self.cache.stats()["misses"]
-            ex = PlanExecutor(geom, plan, cache=self.cache,
-                              pipeline=self.pipeline)
+            tuned = config is not None and config.source != "heuristic"
+            ex = PlanExecutor(
+                geom, plan, cache=self.cache,
+                pipeline=config.pipeline if tuned else self.pipeline,
+                pipeline_depth=(config.pipeline_depth if tuned else 2),
+                tuned=config if tuned else None)
             ex.warm()
             built = self.cache.stats()["misses"] - misses_before
-            bucket = _Bucket(geom, plan, ex, programs_built=built)
+            bucket = _Bucket(geom, plan, ex, programs_built=built,
+                             config=config, source=self._source_of(config))
             self._buckets[key] = bucket
             return bucket
 
-    def warmup(self, geometries: Iterable[CTGeometry],
+    def warmup(self, geometries: Iterable[CTGeometry], *,
+               tune: bool = False, tune_budget_s: float = 20.0,
                **options) -> ServiceStats:
-        """Pre-compile the buckets a deployment will serve.
+        """Pre-compile (and optionally pre-TUNE) the buckets a
+        deployment will serve.
 
         One bucket per geometry, same options for all (call repeatedly
         for mixed option sets). After warmup, the first real request of
         each warmed shape is a bucket hit with zero new compiles.
+
+        ``tune=True`` runs the measured autotuner
+        (``runtime.autotune.autotune``) per bucket before any traffic:
+        a persisted winner for this hardware resolves with ZERO
+        re-measurement (bucket ``source == "tuned-cache"``), otherwise
+        the search runs under ``tune_budget_s`` wall seconds per bucket
+        and the winner is persisted (``source == "tuned-measured"``).
+        Tuning shares this service's ProgramCache, so every program the
+        winning config needs is already compiled when the bucket opens.
         """
         for geom in geometries:
-            self._bucket(geom, self._plan(geom, options))
+            if tune:
+                from repro.runtime.autotune import autotune
+                opts = dict(options)
+                cache = self._tuning_cache(opts.pop("tuning", None))
+                with self._lock:
+                    if self.tuning is None:
+                        # later requests must resolve through the SAME
+                        # cache to land in the tuned buckets
+                        self.tuning = cache
+                cfg = autotune(geom, opts.pop("variant", "auto"),
+                               budget_s=tune_budget_s, cache=cache,
+                               program_cache=self.cache, **opts)
+                self._bucket(geom, cfg.build_plan(geom), config=cfg)
+            else:
+                plan, cfg = self._plan(geom, options)
+                self._bucket(geom, plan, config=cfg)
         return self.stats()
 
     # ---- request path ----------------------------------------------------
@@ -234,7 +438,7 @@ class ReconService:
         """Enqueue one reconstruction; returns a ``Future`` whose
         ``result()`` is the volume (same contract as the façade the
         options mirror — ``fdk_reconstruct``). FIFO across callers."""
-        plan = self._plan(geom, options)   # validate in the caller
+        plan, config = self._plan(geom, options)   # validate in the caller
         fut: Future = Future()
         # the closed check and the enqueue are atomic under the lock so
         # a request can never land behind close()'s worker sentinels
@@ -242,7 +446,7 @@ class ReconService:
         with self._lock:
             if self._closed:
                 raise RuntimeError("ReconService is closed")
-            self._queue.put((fut, projections, geom, plan))
+            self._queue.put((fut, projections, geom, plan, config))
         return fut
 
     def reconstruct(self, projections: jnp.ndarray, geom: CTGeometry,
@@ -256,14 +460,19 @@ class ReconService:
             try:
                 if item is None:
                     return
-                fut, projections, geom, plan = item
+                fut, projections, geom, plan, config = item
                 if not fut.set_running_or_notify_cancel():
                     continue
                 try:
-                    bucket = self._bucket(geom, plan)
+                    bucket = self._bucket(geom, plan, config=config)
                     with self._lock:
                         bucket.requests += 1
-                    fut.set_result(bucket.executor.reconstruct(projections))
+                    t0 = time.perf_counter()
+                    result = bucket.executor.reconstruct(projections)
+                    # streamed latency: recorded as each request
+                    # completes, not sampled at stats() time
+                    bucket.latency.record(time.perf_counter() - t0)
+                    fut.set_result(result)
                 except BaseException as exc:
                     fut.set_exception(exc)
             finally:
@@ -273,7 +482,9 @@ class ReconService:
 
     def stats(self) -> ServiceStats:
         with self._lock:
-            buckets = tuple(b.snapshot() for b in self._buckets.values())
+            live = list(self._buckets.values())
+            buckets = tuple(b.snapshot() for b in live)
+        overall = LatencyHistogram.merged(b.latency for b in live)
         return ServiceStats(
             requests=sum(b.requests for b in buckets),
             bucket_hits=sum(b.hits for b in buckets),
@@ -281,7 +492,9 @@ class ReconService:
             buckets=buckets,
             cache=self.cache.stats(),
             max_inflight=self.max_inflight,
-            queued=self._queue.qsize())
+            queued=self._queue.qsize(),
+            p50_ms=_ms(overall.quantile(0.50)),
+            p99_ms=_ms(overall.quantile(0.99)))
 
     def close(self, wait: bool = True) -> None:
         """Stop accepting requests; drain workers (idempotent)."""

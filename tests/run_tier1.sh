@@ -43,7 +43,12 @@ fi
 echo "== tier-1 stage 3/3: perf smoke + trajectory diff (non-gating) =="
 # --diff auto picks the newest committed BENCH_*.json that is not this
 # run's own output (benchmarks.bench_smoke.auto_prior — the one place
-# the comparison base is defined)
+# the comparison base is defined).
+# The stage also runs the bounded-budget autotune smoke (a bench_smoke
+# section): winners persist in the tuning cache, kept workspace-local
+# here (gitignored; CI uploads it as an artifact) so the gate never
+# touches ~/.cache.
+export REPRO_TUNING_CACHE="${REPRO_TUNING_CACHE:-tuning_cache.json}"
 if [[ "${TIER1_STRICT:-0}" == "1" ]]; then
     python -m benchmarks.bench_smoke --json auto \
         --diff auto --warn-regress 0.25 --strict

@@ -148,6 +148,32 @@ def test_async_pipeline_bit_identical(setup, variant):
     assert np.array_equal(np.asarray(seq), np.asarray(pip)), variant
 
 
+@pytest.mark.parametrize("variant", ["algorithm1_mp", "share_mp"])
+def test_async_chunk_major_parity(setup, variant):
+    """The async flush now covers the CHUNK-major loop too (ROADMAP
+    PR-4 follow-up): enqueue order equals the sequential flush order,
+    so output stays bit-identical even though chunks re-add into the
+    same volume regions."""
+    geom, projs = setup
+    plan = plan_reconstruction(geom, variant, nb=2, tile_shape=(8, 8, 16),
+                               proj_batch=2, out="host", schedule="chunk")
+    cache = ProgramCache()
+    seq = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="sync").reconstruct(projs)
+    pip = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="async").reconstruct(projs)
+    assert np.array_equal(np.asarray(seq), np.asarray(pip)), variant
+    # and the raw backproject chunk loop
+    img_t = transpose_projections(projs)
+    from repro.core.geometry import projection_matrices
+    mats = projection_matrices(geom)
+    seq = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="sync").backproject(img_t, mats)
+    pip = PlanExecutor(geom, plan, cache=cache,
+                       pipeline="async").backproject(img_t, mats)
+    assert np.array_equal(np.asarray(seq), np.asarray(pip)), variant
+
+
 def test_async_backproject_parity(setup):
     """The raw backproject path pipelines too (data-dependent chunks)."""
     geom, projs = setup
@@ -235,3 +261,61 @@ def test_closed_service_rejects(setup):
     svc.close()
     with pytest.raises(RuntimeError, match="closed"):
         svc.submit(projs, geom, **OPTS)
+
+
+# ---- streamed latency accounting ------------------------------------------
+
+def test_latency_histogram_quantiles():
+    from repro.runtime.service import LatencyHistogram
+    h = LatencyHistogram()
+    assert h.quantile(0.5) is None and h.mean() is None
+    for ms in (1, 1, 1, 1, 1, 1, 1, 1, 1, 1000):   # 9 fast + 1 slow
+        h.record(ms * 1e-3)
+    assert h.count == 10
+    p50, p99 = h.quantile(0.50), h.quantile(0.99)
+    # log-2 bins: estimates within a bin width of the truth, ordered
+    assert 0.4e-3 < p50 < 3e-3
+    assert 0.5 < p99 < 2.0
+    assert p50 <= p99
+    assert h.mean() == pytest.approx(100.9e-3, rel=1e-6)
+    merged = LatencyHistogram.merged([h, h])
+    assert merged.count == 20 and merged.quantile(0.5) == p50
+
+
+def test_bucket_stats_stream_latency(setup):
+    """Every COMPLETED request lands in its bucket's histogram as it
+    finishes (streamed, not poll-sampled): counts and quantiles are
+    live after each request, and the service-level p50/p99 merge the
+    bucket histograms."""
+    geom, projs = setup
+    with ReconService(max_inflight=1, cache=ProgramCache()) as svc:
+        svc.warmup([geom], **OPTS)
+        assert svc.stats().buckets[0].completed == 0   # warmup != traffic
+        for i in range(3):
+            svc.reconstruct(projs, geom, **OPTS)
+            b = svc.stats().buckets[0]
+            assert b.completed == i + 1               # streams per request
+        stats = svc.stats()
+        b = stats.buckets[0]
+        assert b.p50_ms is not None and b.p99_ms is not None
+        assert b.p50_ms <= b.p99_ms and b.mean_ms > 0
+        assert stats.p50_ms == b.p50_ms               # single bucket merge
+        assert b.source == "heuristic" and b.pipeline == "async"
+
+
+@pytest.mark.slow
+def test_clinical_size_overlap_measurement():
+    """The satellite fix for the misleading smoke overlap_gain: measure
+    sync-vs-async where the per-step flush is MBs. Non-gating on the
+    gain value itself (machine-dependent) — this asserts the clinical
+    path runs and emits the flush-bytes context."""
+    from benchmarks import bench_service, common
+    common.reset_records()
+    gain = bench_service.run_clinical(n=64, n_det=96, n_proj=32, nb=8)
+    rows = {r["name"]: r for r in common.records()}
+    assert "service/pipeline_sync_clinical" in rows
+    assert "service/pipeline_async_clinical" in rows
+    kb = rows["service/pipeline_async_clinical"]["metrics"][
+        "flush_kb_per_step"]
+    assert kb > 200            # clinical flushes are real traffic
+    assert gain > 0
