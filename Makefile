@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
-	bench-smoke bench-service bench-autotune
+	bench-smoke bench-service bench-autotune bench-fleet test-fleet
 
 tier1:
 	tests/run_tier1.sh
@@ -25,6 +25,13 @@ bench-service:                 # serving layer: cold/warm + overlap
 
 bench-autotune:                # measured per-hardware config search
 	$(PY) -m benchmarks.bench_autotune
+
+bench-fleet:                   # single vs fleet (subprocess: 8 devices)
+	$(PY) -m benchmarks.bench_fleet
+
+test-fleet:                    # the multidevice CI lane, locally
+	$(PY) -m pytest -q tests/test_fleet.py tests/test_distributed.py \
+		tests/test_fault_tolerance.py
 
 bench-smoke:                   # perf-trajectory snapshot (non-gating);
 	$(PY) -m benchmarks.bench_smoke --json auto \

@@ -110,6 +110,64 @@ def make_distributed_bp(geom: CTGeometry, mesh, *, nb: int = 32,
     return fn, (in_specs[0], in_specs[1], in_specs[2], out_spec)
 
 
+def make_fleet_bp(variant: str, call_shape: Tuple[int, int, int], *,
+                  nb: int, n_chunks: int, chunk_size: int,
+                  options=(), interpret: bool = True):
+    """Per-device step program for the reconstruction fleet
+    (``runtime.executor.PlanExecutor.execute_fleet``).
+
+    ``prog(img_s, mat_s, origin) -> vol_t(call_shape)`` where ``img_s``
+    / ``mat_s`` are the stacked scan grids ``(n_chunks, chunk_size,
+    ...)`` and ``origin`` is the step's sub-box origin ``(i0, j0,
+    k_off)`` as a traced (3,) f32 array.
+
+    This is :func:`make_distributed_bp`'s translated-matrix trick lifted
+    from mesh slabs to the fleet's per-device step queues: the origin
+    folds into the matrices' constant column INSIDE the program
+    (:func:`~repro.core.tiling.translate_matrices` under the jit), so
+    ONE compiled program per (variant, call_shape, chunk grid) serves
+    EVERY same-shape step on ANY device — a stolen or failed-over step
+    is the same program called with a different origin on a different
+    device, never a recompile. The ``lax.scan`` carries the step's
+    accumulator across all projection chunks device-resident, exactly
+    like the single-device step-major megaprogram.
+
+    Non-jittable kernels (``KernelSpec.jittable=False`` — banded_pl
+    reads concrete matrix values at trace time) fall back to a python
+    chunk loop over concrete arrays; the origin fold and the
+    one-host-crossing contract are unchanged.
+    """
+    from repro.core.variants import get_spec
+
+    spec = get_spec(variant)
+    opts = spec.resolve_options(
+        {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
+    shape = tuple(call_shape)
+    fn = spec.fn
+    if spec.jittable:
+        def prog(img_s, mat_s, origin):
+            mat_s = translate_matrices(mat_s, origin[0], origin[1],
+                                       origin[2])
+
+            def body(acc, xs):
+                img_c, mat_c = xs
+                return acc + fn(img_c, mat_c, shape, **opts), None
+
+            acc, _ = jax.lax.scan(
+                body, jnp.zeros(shape, jnp.float32), (img_s, mat_s))
+            return acc
+        return jax.jit(prog)
+
+    def prog(img_s, mat_s, origin):
+        mat_t = translate_matrices(mat_s, origin[0], origin[1], origin[2])
+        acc = None
+        for c in range(int(n_chunks)):
+            part = fn(img_s[c], mat_t[c], shape, **opts)
+            acc = part if acc is None else acc + part
+        return acc
+    return prog
+
+
 def distributed_backproject(projections_t: jnp.ndarray, mats: jnp.ndarray,
                             geom: CTGeometry, mesh, *, nb: int = 32,
                             variant: str = "scan"):

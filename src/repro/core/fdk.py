@@ -55,6 +55,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     pipeline: Optional[str] = None,
                     tuning=None,
                     service=None,
+                    devices=None,
                     **kernel_options) -> jnp.ndarray:
     """Reconstruct volume (nz, ny, nx) from raw projections (np, nh, nw).
 
@@ -97,8 +98,18 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
     executors own the flush discipline (``ReconService(pipeline=)``),
     so combining ``service=`` with an explicit ``pipeline=`` is an
     error rather than a silent override.
+
+    ``devices`` shards the step schedule across a reconstruction fleet
+    (``PlanExecutor.execute_fleet``): ``"all"`` uses every local
+    device, an int N the first N, a sequence (or a
+    ``runtime.executor.FleetConfig``) exactly those. Steps run with
+    straggler-aware work stealing and per-step failover; the output
+    equals the single-device walk (disjoint step boxes). Defaults
+    ``out`` to "host" (the fleet accumulates on host). Device
+    placement is owned by a service's buckets (``ReconService
+    (devices=)``), so ``service=`` + ``devices=`` is an error.
     """
-    from repro.runtime.executor import PlanExecutor
+    from repro.runtime.executor import PlanExecutor, as_fleet_config
 
     if service is not None:
         if pipeline is not None:
@@ -106,11 +117,24 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                 "pipeline= is owned by the service's bucket executors "
                 "(ReconService(pipeline=...)); do not pass both "
                 "service= and pipeline=")
+        if devices is not None:
+            raise ValueError(
+                "devices= is owned by the service's bucket executors "
+                "(ReconService(devices=...)); do not pass both "
+                "service= and devices=")
         return service.reconstruct(
             projections, geom, variant=variant, nb=nb, interpret=interpret,
             tiling=tiling, memory_budget=memory_budget,
             proj_batch=proj_batch, out=out, schedule=schedule,
             tuning=tuning, **kernel_options)
+    fleet = as_fleet_config(devices)
+    if fleet is not None:
+        # the fleet accumulates per-device step outputs into a host
+        # volume over the step schedule; default unset knobs to that
+        # placement (explicit contrary choices fail fast in the
+        # executor's validation)
+        out = out or "host"
+        schedule = schedule or "step"
     if variant == "auto" or tuning is not None:
         # lookup-only tuned resolution: the config also carries the
         # executor-level pipeline knobs the plan cannot
@@ -120,13 +144,14 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
             interpret=interpret, tiling=tiling,
             memory_budget=memory_budget, proj_batch=proj_batch, out=out,
             schedule=schedule, **kernel_options)
-        if pipeline is None:
+        if pipeline is None and fleet is None:
             ex = PlanExecutor.from_config(geom, cfg)
         else:                         # explicit override beats the cache
             ex = PlanExecutor(geom, cfg.build_plan(geom),
-                              pipeline=pipeline,
+                              pipeline=cfg.pipeline if pipeline is None
+                              else pipeline,
                               pipeline_depth=cfg.pipeline_depth,
-                              tuned=cfg)
+                              tuned=cfg, fleet=fleet)
         return ex.reconstruct(projections)
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
@@ -135,6 +160,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
     return PlanExecutor(
         geom, plan,
         pipeline="sync" if pipeline is None else pipeline,
+        fleet=fleet,
     ).reconstruct(projections)
 
 

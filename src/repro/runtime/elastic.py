@@ -21,8 +21,16 @@ def remesh_plan(n_devices: int, *, model_parallel: int) -> Tuple[int, ...]:
 
     Keeps the model axis fixed (param layouts keep working), shrinks or
     grows the data axis — the elastic dimension. Leftover devices idle
-    (spares for the next failure).
+    (spares for the next failure). The reconstruction fleet uses the
+    same contract at queue granularity: after a device retires, the
+    NEXT run simply partitions the step schedule over the survivors
+    (``runtime.planner.partition_steps`` — pure, any shard count).
     """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel}")
     if n_devices < model_parallel:
         # Degraded mode: shrink model axis to the largest power-of-two
         # divisor that fits; params must be re-laid-out from checkpoint.

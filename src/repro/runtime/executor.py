@@ -45,10 +45,13 @@ this module turns it into arrays:
 
 from __future__ import annotations
 
+import collections
+import dataclasses
 import functools
 import queue
 import threading
-from typing import Callable, Dict, Optional, Tuple
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -65,8 +68,9 @@ from repro.core.tiling import (
 from repro.core.variants import get_spec
 from repro.runtime.planner import (
     PlanStep, ReconPlan, StepMajorSchedule, build_step_major,
-    resolve_tile_variant,
+    partition_steps, resolve_tile_variant,
 )
+from repro.runtime.straggler import FleetStragglerBoard
 
 
 # --------------------------------------------------------------------------
@@ -167,6 +171,29 @@ class ProgramCache:
                     acc = part if acc is None else _acc_add(acc, part)
                 return acc
             return prog
+
+        return self.get_or_build(key, build)
+
+    def fleet_program(self, variant: str, call_shape: Tuple[int, int, int],
+                      nb: int, dtype: str, interpret: bool,
+                      options: Tuple = (), *, n_chunks: int,
+                      chunk_size: int) -> Callable:
+        """Fleet step program: ``prog(img_s, mat_s, origin) ->
+        vol_t(call_shape)`` — the scan megaprogram with the step origin
+        as a TRACED call-time argument (``core.distributed
+        .make_fleet_bp``), so one key serves every same-shape step on
+        every device: work stealing and failover never add a key.
+        """
+        key = ("fleet", variant, tuple(call_shape), int(nb), str(dtype),
+               bool(interpret), tuple(options), int(n_chunks),
+               int(chunk_size))
+
+        def build():
+            from repro.core.distributed import make_fleet_bp
+            return make_fleet_bp(
+                variant, tuple(call_shape), nb=int(nb),
+                n_chunks=int(n_chunks), chunk_size=int(chunk_size),
+                options=tuple(options), interpret=bool(interpret))
 
         return self.get_or_build(key, build)
 
@@ -351,6 +378,99 @@ class _FilteredChunkProducer:
         return jnp.stack(imgs), jnp.stack(mats)
 
 
+# --------------------------------------------------------------------------
+# Fleet execution: multi-device step-schedule sharding
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """How a :class:`PlanExecutor` spreads a step-major plan across
+    devices (``execute_fleet``).
+
+    devices : explicit jax devices to use; ``None`` resolves to all
+        local devices at run time (``jax.local_devices()`` — under
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` that is
+        the N forced host devices, the no-hardware CI lane).
+    max_retries_per_step : failover budget PER STEP INDEX — the
+        :class:`~repro.runtime.fault_tolerance.FaultTolerantLoop` retry
+        contract: counted per index, never reset by successes elsewhere.
+        A step that fails more than this many times across the whole
+        fleet aborts the run (a poison step; skipping would corrupt the
+        volume, unlike a training batch).
+    device_strikes : step failures charged to one device before it is
+        RETIRED: its worker exits, its unclaimed queue is drained by the
+        surviving devices through the normal stealing path, and its
+        already-failed steps re-run elsewhere (disjoint output boxes ⇒
+        idempotent re-execution).
+    straggler_window / straggler_ratio : the
+        :class:`~repro.runtime.straggler.FleetStragglerBoard` knobs — a
+        device whose recent median step time exceeds ``ratio`` x the
+        fleet median is flagged, and idle devices steal from flagged
+        queues first.
+    step_hook : test seam called as ``hook(device_index, step_index)``
+        before a step's program runs — raise to inject a device fault,
+        sleep to simulate a straggler. ``None`` in production.
+    """
+
+    devices: Optional[Tuple] = None
+    max_retries_per_step: int = 2
+    device_strikes: int = 2
+    straggler_window: int = 32
+    straggler_ratio: float = 1.5
+    step_hook: Optional[Callable[[int, int], None]] = None
+
+    def resolve_devices(self) -> Tuple:
+        return (tuple(self.devices) if self.devices
+                else tuple(jax.local_devices()))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    """What one ``execute_fleet`` run did: per-device completion counts,
+    how many steps migrated (``stolen``), how many re-ran after a
+    failure (``retried``), which devices were retired (``dead_devices``)
+    and which the straggler board flagged (``flagged_devices``)."""
+
+    n_devices: int
+    n_steps: int
+    steps_by_device: Tuple[int, ...]
+    stolen: int
+    retried: int
+    dead_devices: Tuple[int, ...]
+    flagged_devices: Tuple[int, ...]
+
+
+def as_fleet_config(devices, *, max_retries_per_step: int = 2,
+                    step_hook=None) -> Optional[FleetConfig]:
+    """Normalize a façade/service ``devices=`` argument.
+
+    ``None`` -> no fleet (single-device walks); ``"all"`` -> every local
+    device, resolved lazily at run time; an ``int`` N -> the first N of
+    ``jax.local_devices()`` (resolved now); a sequence of jax devices ->
+    exactly those; an existing :class:`FleetConfig` passes through.
+    """
+    if devices is None:
+        return None
+    if isinstance(devices, FleetConfig):
+        return devices
+    if devices == "all":
+        devs = None
+    elif isinstance(devices, int):
+        local = jax.local_devices()
+        if not 1 <= devices <= len(local):
+            raise ValueError(
+                f"devices={devices} but {len(local)} local devices "
+                f"are available")
+        devs = tuple(local[:devices])
+    else:
+        devs = tuple(devices)
+        if not devs:
+            raise ValueError("devices sequence must be non-empty")
+    return FleetConfig(devices=devs,
+                       max_retries_per_step=max_retries_per_step,
+                       step_hook=step_hook)
+
+
 class PlanExecutor:
     """Executes a :class:`ReconPlan` against projection data.
 
@@ -374,16 +494,35 @@ class PlanExecutor:
     def __init__(self, geom: CTGeometry, plan: ReconPlan,
                  cache: Optional[ProgramCache] = None, *,
                  pipeline: str = "sync", pipeline_depth: int = 2,
-                 tuned=None):
+                 tuned=None, fleet: Optional[FleetConfig] = None):
         if pipeline not in ("sync", "async"):
             raise ValueError(
                 f"pipeline must be 'sync' or 'async', got {pipeline!r}")
+        if fleet is not None:
+            if plan.schedule != "step":
+                raise ValueError(
+                    "fleet execution shards the STEP schedule "
+                    "(disjoint output boxes are the shard axis); plan "
+                    f"with schedule='step', got {plan.schedule!r}")
+            if plan.out != "host":
+                raise ValueError(
+                    "fleet execution accumulates per-device step "
+                    "outputs into a host volume; plan with out='host', "
+                    f"got {plan.out!r}")
         self.geom = geom
         self.plan = plan
         self.cache = cache if cache is not None else default_program_cache()
         self.pipeline = pipeline
         self.pipeline_depth = int(pipeline_depth)
         self.tuned = tuned    # TunedConfig provenance, None = heuristic
+        self.fleet = fleet    # FleetConfig, None = single-device walks
+        self.last_fleet_report: Optional[FleetReport] = None
+        self._fleet_lock = threading.Lock()
+        # accumulated across runs (the serving layer snapshots these —
+        # per-run reports on a shared bucket executor would race)
+        self.fleet_totals: Dict[str, int] = {
+            "runs": 0, "devices": 0, "stolen": 0, "retried": 0,
+            "dead_devices": 0}
 
     @classmethod
     def from_config(cls, geom: CTGeometry, config,
@@ -410,9 +549,23 @@ class PlanExecutor:
                                        n_chunks=sched.n_chunks,
                                        chunk_size=sched.chunk_size)
 
+    def _fleet_program(self, variant: str, call_shape,
+                       sched: StepMajorSchedule) -> Callable:
+        return self.cache.fleet_program(variant, call_shape, self.plan.nb,
+                                        "float32", self.plan.interpret,
+                                        self.plan.options,
+                                        n_chunks=sched.n_chunks,
+                                        chunk_size=sched.chunk_size)
+
     def warm(self) -> Dict[str, int]:
         """Compile every distinct program the plan needs; return stats."""
-        if self.plan.schedule == "step":
+        if self.fleet is not None:
+            # one origin-traced program per (variant, shape) serves the
+            # whole fleet; XLA specializes per device on first dispatch
+            sched = self.plan.step_major
+            for variant, shape in self.plan.program_keys:
+                self._fleet_program(variant, shape, sched)
+        elif self.plan.schedule == "step":
             sched = self.plan.step_major
             for variant, shape in self.plan.program_keys:
                 self._scan_program(variant, shape, sched)
@@ -551,6 +704,175 @@ class PlanExecutor:
             vol[sl] += np.asarray(piece)
         return vol
 
+    def execute_fleet(self, vol: np.ndarray, img_s: jnp.ndarray,
+                      mat_s: jnp.ndarray, sched: StepMajorSchedule, *,
+                      fleet: Optional[FleetConfig] = None) -> np.ndarray:
+        """Shard a step-major schedule across a device fleet.
+
+        The step list is partitioned into per-device work queues
+        (``runtime.planner.partition_steps`` — LPT-balanced on modeled
+        voxel work); the filtered chunk stack is replicated onto each
+        device that takes work (lazily — an idle spare pays nothing),
+        and one dispatcher thread per device drains its queue through
+        the shared origin-traced fleet program
+        (``ProgramCache.fleet_program``). Step outputs land in the host
+        volume's disjoint boxes, so completion order is irrelevant and
+        the result equals the single-device step-major walk.
+
+        **Work stealing**: an idle device first drains the fleet retry
+        queue, then steals from the tail of another device's queue —
+        preferring devices the :class:`FleetStragglerBoard` has flagged
+        as slow, so a straggler's unclaimed steps migrate first.
+
+        **Failover**: a failed step is requeued fleet-wide and re-run
+        on whichever device takes it — re-execution is idempotent
+        (disjoint, not-yet-flushed output). Failures are budgeted PER
+        STEP INDEX (``max_retries_per_step`` — the FaultTolerantLoop
+        contract); exceeding it raises (a poison step would corrupt the
+        volume). A device accumulating ``device_strikes`` failures is
+        retired and its remaining queue drains to the survivors.
+        """
+        cfg = fleet if fleet is not None else (self.fleet or FleetConfig())
+        devices = cfg.resolve_devices()
+        n_dev = len(devices)
+        steps = tuple(w.step for w in sched.steps)
+        n_steps = len(steps)
+        if n_steps == 0:
+            self._record_fleet(FleetReport(n_dev, 0, (0,) * n_dev,
+                                           0, 0, (), ()))
+            return vol
+        fs = partition_steps(steps, n_dev)
+        board = FleetStragglerBoard(n_dev, window=cfg.straggler_window,
+                                    ratio=cfg.straggler_ratio)
+
+        cond = threading.Condition()
+        deques = [collections.deque(q) for q in fs.queues]
+        retry: collections.deque = collections.deque()
+        counts = {"outstanding": 0, "stolen": 0, "retried": 0, "done": 0}
+        failures: collections.Counter = collections.Counter()  # per index
+        strikes: collections.Counter = collections.Counter()   # per device
+        dead: set = set()
+        done_by_device = [0] * n_dev
+        fatal: list = []                 # [(step index, exception)]
+        flush_lock = threading.Lock()
+
+        def take(d: int):
+            """Next step index for device ``d`` (call under ``cond``):
+            own queue in schedule order, then the fleet retry queue,
+            then steal from the tail of the neediest victim — flagged
+            (straggling) devices first, longest backlog next."""
+            if deques[d]:
+                return deques[d].popleft()
+            if retry:
+                return retry.popleft()
+            flagged = set(board.flagged)
+            victims = [v for v in range(n_dev) if v != d and deques[v]]
+            if not victims:
+                return None
+            victims.sort(key=lambda v: (v not in flagged,
+                                        -len(deques[v]), v))
+            counts["stolen"] += 1
+            return deques[victims[0]].pop()
+
+        def worker(d: int) -> None:
+            dev = devices[d]
+            img_d = mat_d = None
+            while True:
+                with cond:
+                    while True:
+                        if fatal or d in dead:
+                            return
+                        idx = take(d)
+                        if idx is not None:
+                            counts["outstanding"] += 1
+                            break
+                        if counts["outstanding"] == 0 and not retry \
+                                and not any(deques):
+                            return      # fleet drained
+                        cond.wait(0.05)
+                step = steps[idx]
+                t0 = time.perf_counter()
+                try:
+                    if cfg.step_hook is not None:
+                        cfg.step_hook(d, idx)
+                    if img_d is None:
+                        # replicate the chunk stack onto this device
+                        # once, lazily: a spare that never takes work
+                        # never pays the copy
+                        img_d = jax.device_put(img_s, dev)
+                        mat_d = jax.device_put(mat_s, dev)
+                    prog = self._fleet_program(step.variant,
+                                               step.call_shape, sched)
+                    origin = jax.device_put(
+                        jnp.asarray([step.i0, step.j0, step.k_off],
+                                    jnp.float32), dev)
+                    out = jax.block_until_ready(prog(img_d, mat_d, origin))
+                except Exception as exc:  # noqa: BLE001 — any step fault
+                    with cond:
+                        counts["outstanding"] -= 1
+                        failures[idx] += 1
+                        strikes[d] += 1
+                        if failures[idx] > cfg.max_retries_per_step:
+                            fatal.append((idx, exc))
+                        else:
+                            retry.append(idx)
+                            counts["retried"] += 1
+                        if strikes[d] >= cfg.device_strikes:
+                            dead.add(d)
+                        cond.notify_all()
+                    if fatal or d in dead:
+                        return
+                    continue
+                dur = time.perf_counter() - t0
+                # flush the step's disjoint writes; order across steps
+                # is irrelevant (disjoint boxes into a zeroed volume)
+                with flush_lock:
+                    for sl, piece in self._step_writes(step, out):
+                        vol[sl] += np.asarray(piece)
+                board.record(d, idx, dur)
+                with cond:
+                    counts["outstanding"] -= 1
+                    done_by_device[d] += 1
+                    counts["done"] += 1
+                    cond.notify_all()
+
+        threads = [threading.Thread(target=worker, args=(d,),
+                                    name=f"recon-fleet-{d}", daemon=True)
+                   for d in range(n_dev)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if fatal:
+            idx, exc = fatal[0]
+            raise RuntimeError(
+                f"fleet step {idx} failed more than "
+                f"max_retries_per_step={cfg.max_retries_per_step} times "
+                f"across devices — poison step, volume would be "
+                f"incomplete") from exc
+        if counts["done"] < n_steps:
+            raise RuntimeError(
+                f"fleet lost all devices with {n_steps - counts['done']} "
+                f"of {n_steps} steps unfinished "
+                f"(retired devices: {sorted(dead)})")
+        self._record_fleet(FleetReport(
+            n_devices=n_dev, n_steps=n_steps,
+            steps_by_device=tuple(done_by_device),
+            stolen=counts["stolen"], retried=counts["retried"],
+            dead_devices=tuple(sorted(dead)),
+            flagged_devices=board.flagged))
+        return vol
+
+    def _record_fleet(self, report: FleetReport) -> None:
+        with self._fleet_lock:
+            self.last_fleet_report = report
+            t = self.fleet_totals
+            t["runs"] += 1
+            t["devices"] = report.n_devices
+            t["stolen"] += report.stolen
+            t["retried"] += report.retried
+            t["dead_devices"] += len(report.dead_devices)
+
     # ---- full-volume drivers --------------------------------------------
 
     def _data_step_major(self, chunks) -> StepMajorSchedule:
@@ -572,6 +894,9 @@ class PlanExecutor:
         if plan.schedule == "step":
             sched = self._data_step_major(chunks)
             img_s, mat_s = _stack_chunks(img_p, mat_p, sched)
+            if self.fleet is not None:
+                return self.execute_fleet(self._alloc(), img_s, mat_s,
+                                          sched)
             if self._single_full_call() and plan.out == "device":
                 step = plan.steps[0]
                 return self._scan_program(step.variant, step.call_shape,
@@ -661,6 +986,10 @@ class PlanExecutor:
         if plan.schedule == "step":
             sched = plan.step_major
             img_s, mat_s = producer.stacked(sched)
+            if self.fleet is not None:
+                vol = self.execute_fleet(self._alloc(), img_s, mat_s,
+                                         sched)
+                return np.transpose(vol, (2, 1, 0))
             if self._single_full_call() and plan.out == "device":
                 step = plan.steps[0]
                 acc = self._scan_program(step.variant, step.call_shape,

@@ -17,14 +17,24 @@ coordinator's key-value store):
 
 from __future__ import annotations
 
+import collections
 import logging
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 log = logging.getLogger("repro.runtime")
 
 
 class Heartbeat:
+    """Progress timestamps for an external supervisor.
+
+    ``stale`` is gated on the first completed step (``step >= 0``): the
+    gap between construction and the first beat includes jit warmup of
+    the first step, which can legitimately exceed ``timeout_s`` — a
+    supervisor must not shoot a host that is still compiling. Once any
+    step has beaten, a silent gap longer than ``timeout_s`` means hung.
+    """
+
     def __init__(self, timeout_s: float = 300.0):
         self.timeout_s = timeout_s
         self.last_beat = time.monotonic()
@@ -36,6 +46,8 @@ class Heartbeat:
 
     @property
     def stale(self) -> bool:
+        if self.step < 0:        # warmup: no step has completed yet
+            return False
         return (time.monotonic() - self.last_beat) > self.timeout_s
 
 
@@ -67,8 +79,20 @@ class FaultTolerantLoop:
     def run(self, state, step_fn: Callable, *, start_step: int,
             num_steps: int, on_metrics: Optional[Callable] = None):
         step = start_step
-        retries_here = 0
+        # Failures are counted PER STEP INDEX, never reset by successes:
+        # when a checkpoint precedes a deterministic poison step, the
+        # restore rewinds to ck_step and the replayed steps all succeed —
+        # a consecutive-attempt counter (the old `retries_here`) would
+        # reset on each of them and the loop would recover forever. The
+        # per-index count survives the replay, so the poison step's
+        # budget is exceeded after max_retries+1 failures no matter how
+        # many checkpoint rewinds happen in between.
+        fail_counts: Dict[int, int] = collections.Counter()
         while step < start_step + num_steps:
+            if fail_counts[step] > self.max_retries:
+                log.warning("skipping poisoned step %d", step)
+                step += 1          # poison skip-ahead (re-entrant steps)
+                continue
             batch = self.pipeline.batch_at(step)
             try:
                 state, metrics = step_fn(state, batch)
@@ -77,19 +101,14 @@ class FaultTolerantLoop:
                         f"non-finite loss at step {step}: {metrics}")
             except Exception as e:  # noqa: BLE001 — any step fault recovers
                 self.failures += 1
-                retries_here += 1
+                fail_counts[step] += 1
                 log.warning("step %d failed (%s); recovering", step, e)
                 ck_step, restored = self.ckpt.restore_latest(state)
                 if restored is not None:
                     state = restored
                     step = ck_step
-                if retries_here > self.max_retries:
-                    log.warning("skipping poisoned step %d", step)
-                    step += 1          # straggler/poison skip-ahead
-                    retries_here = 0
                 self.recoveries += 1
                 continue
-            retries_here = 0
             self.heartbeat.beat(step)
             if on_metrics:
                 on_metrics(step, metrics)

@@ -140,6 +140,72 @@ class StepMajorSchedule:
     n_scan: int
     steps: Tuple[StepWork, ...]
 
+    def fleet(self, n_shards: int) -> "FleetSchedule":
+        """Partition this schedule's steps into ``n_shards`` balanced
+        per-device work queues (see :func:`partition_steps`)."""
+        return partition_steps(tuple(w.step for w in self.steps),
+                               n_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSchedule:
+    """Per-device work queues over a step schedule — the multi-device
+    fleet's partition of a :class:`StepMajorSchedule`.
+
+    ``queues[d]`` holds the step INDICES (into the partitioned step
+    sequence, in schedule order) device ``d`` owns at launch; ``loads``
+    is the modeled voxel-work per device the LPT packing balanced.
+    Because every step writes a DISJOINT box of the volume and is
+    re-entrant (pure function of the filtered chunk stack + its origin),
+    ownership is only the STARTING assignment: work stealing may migrate
+    a queued step to any idle device, and failover may re-run a failed
+    device's steps elsewhere, without changing the result.
+    """
+
+    n_shards: int
+    queues: Tuple[Tuple[int, ...], ...]
+    loads: Tuple[int, ...]
+
+    @property
+    def n_steps(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+
+def step_cost(step: PlanStep) -> int:
+    """Modeled per-chunk work of one step: the kernel call's voxel
+    count. All steps of one schedule scan the same chunk list, so the
+    chunk factor is constant and drops out of the balance."""
+    return step.ni * step.nj * step.call_nk
+
+
+def partition_steps(steps: Sequence[PlanStep],
+                    n_shards: int) -> FleetSchedule:
+    """Partition a step list into ``n_shards`` balanced work queues.
+
+    Greedy LPT (longest-processing-time first): steps are assigned in
+    decreasing :func:`step_cost` order to the least-loaded shard —
+    within 4/3 of the optimal makespan, deterministic (ties break on
+    the lower step index, then the lower shard index), and pure, so the
+    partition is unit-testable without devices (tests/test_planner.py).
+    Every index in ``range(len(steps))`` appears in exactly one queue;
+    queues keep schedule order (interior tiles stay adjacent — the
+    shared scan-program key stays warm within a queue).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    order = sorted(range(len(steps)),
+                   key=lambda i: (-step_cost(steps[i]), i))
+    loads = [0] * n_shards
+    queues: Tuple[list, ...] = tuple([] for _ in range(n_shards))
+    for i in order:
+        d = min(range(n_shards), key=lambda s: (loads[s], s))
+        queues[d].append(i)
+        loads[d] += step_cost(steps[i])
+    return FleetSchedule(
+        n_shards=n_shards,
+        queues=tuple(tuple(sorted(q)) for q in queues),
+        loads=tuple(loads))
+
 
 def build_step_major(steps: Sequence[PlanStep],
                      chunks: Sequence[Tuple[int, int]],

@@ -77,8 +77,8 @@ import jax.numpy as jnp
 
 from repro.core.fdk import _build_plan
 from repro.core.geometry import CTGeometry
-from repro.runtime.executor import PlanExecutor, ProgramCache, \
-    default_program_cache
+from repro.runtime.executor import FleetConfig, PlanExecutor, \
+    ProgramCache, as_fleet_config, default_program_cache
 from repro.runtime.planner import ReconPlan
 
 
@@ -187,6 +187,13 @@ class BucketStats:
     p50_ms: Optional[float] = None
     p99_ms: Optional[float] = None
     mean_ms: Optional[float] = None
+    # fleet placement (all zero on a single-device service): device
+    # count of the last fleet run, plus lifetime steal / failover-rerun
+    # / retired-device totals from the bucket executor's fleet_totals
+    devices: int = 0
+    steals: int = 0
+    failovers: int = 0
+    dead_devices: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,7 +240,13 @@ class _Bucket:
         self.hits = 0
 
     def snapshot(self) -> BucketStats:
+        with self.executor._fleet_lock:
+            fleet = dict(self.executor.fleet_totals)
         return BucketStats(
+            devices=fleet["devices"],
+            steals=fleet["stolen"],
+            failovers=fleet["retried"],
+            dead_devices=fleet["dead_devices"],
             variant=self.plan.variant,
             vol_shape_xyz=self.plan.vol_shape_xyz,
             n_proj=self.plan.n_proj,
@@ -276,15 +289,31 @@ class ReconService:
         ``runtime.autotune.TuningCache``, a cache-file path, or None
         (the default cache: ``$REPRO_TUNING_CACHE`` or
         ``~/.cache/repro/tuning.json``).
+    devices : multi-device placement for every bucket. ``None`` (the
+        default) keeps single-device execution; ``"all"`` spreads each
+        reconstruction's step schedule over every local device; an int
+        N uses the first N local devices; a device sequence or a
+        :class:`~repro.runtime.executor.FleetConfig` is used as-is.
+        Fleet buckets plan ``out="host"`` / ``schedule="step"`` by
+        default (the fleet's required placement) and run with
+        straggler-aware work stealing + per-step failover
+        (``PlanExecutor.execute_fleet``); per-bucket steal/failover
+        totals surface in :class:`ServiceStats`.
+    fleet_max_retries : per-STEP failover budget of fleet buckets
+        (``FleetConfig.max_retries_per_step``); ignored without
+        ``devices``.
     """
 
     def __init__(self, *, max_inflight: int = 2, pipeline: str = "async",
-                 cache: Optional[ProgramCache] = None, tuning=None):
+                 cache: Optional[ProgramCache] = None, tuning=None,
+                 devices=None, fleet_max_retries: int = 2):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.cache = cache if cache is not None else default_program_cache()
         self.pipeline = pipeline
         self.tuning = tuning
+        self.fleet: Optional[FleetConfig] = as_fleet_config(
+            devices, max_retries_per_step=fleet_max_retries)
         self.max_inflight = int(max_inflight)
         self._buckets: Dict[tuple, _Bucket] = {}
         self._lock = threading.Lock()          # buckets + counters
@@ -330,6 +359,12 @@ class ReconService:
             memory_budget=opts.pop("memory_budget", None),
             proj_batch=opts.pop("proj_batch", None),
             out=opts.pop("out", None), schedule=opts.pop("schedule", None))
+        if self.fleet is not None:
+            # fleet execution requires host accumulation over the step
+            # schedule; default unset knobs to that placement (explicit
+            # contrary choices fail fast in PlanExecutor's validation)
+            kw["out"] = kw["out"] or "host"
+            kw["schedule"] = kw["schedule"] or "step"
         if variant == "auto" or tuning is not None:
             from repro.runtime.autotune import resolve_config
             cfg = resolve_config(geom, variant,
@@ -373,7 +408,7 @@ class ReconService:
                         geom, plan, cache=self.cache,
                         pipeline=config.pipeline,
                         pipeline_depth=config.pipeline_depth,
-                        tuned=config)
+                        tuned=config, fleet=self.fleet)
                     ex.warm()
                     bucket.executor = ex
                     bucket.config = config
@@ -385,7 +420,7 @@ class ReconService:
                 geom, plan, cache=self.cache,
                 pipeline=config.pipeline if tuned else self.pipeline,
                 pipeline_depth=(config.pipeline_depth if tuned else 2),
-                tuned=config if tuned else None)
+                tuned=config if tuned else None, fleet=self.fleet)
             ex.warm()
             built = self.cache.stats()["misses"] - misses_before
             bucket = _Bucket(geom, plan, ex, programs_built=built,

@@ -1,0 +1,218 @@
+"""Regression tests for the revived failover modules.
+
+The reconstruction fleet (tests/test_fleet.py) leans on three dormant
+runtime modules whose latent bugs only bite once something actually
+exercises them; these tests pin the fixes:
+
+  * ``FaultTolerantLoop.run`` — failures are counted PER STEP INDEX.
+    The old consecutive-attempt counter (``retries_here``) reset every
+    time a checkpoint restore rewound the loop and the replayed steps
+    succeeded, so a deterministic poison step AFTER a checkpoint
+    recovered forever and skip-ahead never fired.
+  * ``StragglerMonitor.record`` — the outlier scale is floored at
+    ``floor_frac`` of the median. The old ``mad or 1e-9`` floor turned
+    a near-constant window (MAD == 0) into a nanosecond scale, flagging
+    microsecond jitter as a straggler.
+  * ``Heartbeat.stale`` — gated on the first completed step, so a
+    supervisor never shoots a host still inside its first jit compile.
+
+Plus the fleet-facing contracts the tentpole added on top:
+``FleetStragglerBoard`` (cross-device flagging) and ``remesh_plan``
+validation / degraded-mode shapes.
+"""
+
+import time
+
+import pytest
+
+from repro.runtime import (FaultTolerantLoop, FleetStragglerBoard,
+                           Heartbeat, StragglerMonitor, remesh_plan)
+
+
+class FakePipeline:
+    """batch_at(step) == step: pure, seekable, trivially re-entrant."""
+
+    def batch_at(self, step):
+        return step
+
+    def seek(self, step):
+        pass
+
+
+class MemCheckpointer:
+    """In-memory checkpoint store with the Checkpointer API surface."""
+
+    def __init__(self):
+        self.saved = {}
+
+    def save(self, step, state, blocking=False):
+        self.saved[step] = state
+
+    def restore_latest(self, like):
+        if not self.saved:
+            return None, None
+        step = max(self.saved)
+        return step, self.saved[step]
+
+
+# --------------------------------------------------------------------------
+# FaultTolerantLoop: per-step-index failure accounting
+# --------------------------------------------------------------------------
+
+def test_poison_step_skipped_without_checkpoint():
+    """A deterministic poison step exhausts its per-index budget and is
+    skipped; every other step completes exactly once."""
+    loop = FaultTolerantLoop(checkpointer=MemCheckpointer(),
+                             pipeline=FakePipeline(), save_every=100,
+                             max_retries_per_step=2)
+    completed = []
+
+    def step_fn(state, batch):
+        if batch == 3:
+            raise RuntimeError("poison")
+        completed.append(batch)
+        return state + 1, {"loss": 0.0}
+
+    end, final = loop.run(0, step_fn, start_step=0, num_steps=6)
+    assert end == 6
+    assert loop.failures == 3            # max_retries + 1, then skip
+    assert 3 not in completed
+    assert completed == [0, 1, 2, 4, 5]
+
+
+def test_poison_step_after_checkpoint_terminates():
+    """THE regression: a checkpoint lands before the poison step, so
+    every failure rewinds to the checkpoint and the replayed steps
+    succeed. The old consecutive-attempt counter reset on each replay
+    and the loop recovered forever; the per-index count survives the
+    rewind, fires skip-ahead, and the run terminates."""
+    ck = MemCheckpointer()
+    loop = FaultTolerantLoop(checkpointer=ck, pipeline=FakePipeline(),
+                             save_every=4, max_retries_per_step=2)
+
+    def step_fn(state, batch):
+        if batch == 5:                   # deterministic: fails on replay too
+            raise RuntimeError("poison after checkpoint")
+        return state + 1, {"loss": 0.0}
+
+    end, final = loop.run(0, step_fn, start_step=0, num_steps=8)
+    assert end == 8
+    assert loop.failures == 3            # budget spent despite the rewinds
+    assert loop.recoveries == 3
+    assert 4 in ck.saved                 # the checkpoint that caused rewinds
+
+
+def test_transient_failure_still_recovers():
+    """One-shot faults keep the old behavior: restore + replay, no skip."""
+    loop = FaultTolerantLoop(checkpointer=MemCheckpointer(),
+                             pipeline=FakePipeline(), save_every=2,
+                             max_retries_per_step=2)
+    armed = {"on": True}
+
+    def step_fn(state, batch):
+        if armed["on"] and batch == 3:
+            armed["on"] = False
+            raise RuntimeError("transient")
+        return state + 1, {"loss": 0.0}
+
+    end, final = loop.run(0, step_fn, start_step=0, num_steps=6)
+    assert end == 6
+    assert loop.failures == 1
+    assert final >= 5                    # no step silently skipped
+
+
+# --------------------------------------------------------------------------
+# Heartbeat: warmup gate
+# --------------------------------------------------------------------------
+
+def test_heartbeat_not_stale_during_first_compile():
+    """Before any step beats, a long silent gap is warmup (first-step
+    jit compile), not a hang — the supervisor must not flag it."""
+    hb = Heartbeat(timeout_s=0.01)
+    time.sleep(0.05)                     # construction-to-first-beat gap
+    assert not hb.stale
+
+
+def test_heartbeat_stale_after_first_beat():
+    hb = Heartbeat(timeout_s=0.01)
+    hb.beat(0)
+    assert not hb.stale
+    time.sleep(0.05)
+    assert hb.stale
+
+
+# --------------------------------------------------------------------------
+# StragglerMonitor: relative outlier floor
+# --------------------------------------------------------------------------
+
+def test_constant_window_ignores_jitter():
+    """A near-constant duration window (MAD == 0) must not flag
+    microsecond jitter: the old absolute 1e-9 floor made (1e-6 / 1e-9)
+    an 'outlier' of a thousand sigma."""
+    mon = StragglerMonitor(window=16, threshold=3.0)
+    for i in range(10):
+        assert not mon.record(i, 1.0)
+    assert not mon.record(10, 1.0 + 1e-6)     # jitter, not a straggler
+    assert mon.flagged_steps == []
+
+
+def test_constant_window_still_flags_real_straggler():
+    mon = StragglerMonitor(window=16, threshold=3.0)
+    for i in range(10):
+        mon.record(i, 1.0)
+    assert mon.record(10, 2.0)                # 2x median: a real outlier
+    assert 10 in mon.flagged_steps
+
+
+def test_jittery_window_flags_outlier():
+    mon = StragglerMonitor(window=16, threshold=3.0)
+    for i in range(12):
+        mon.record(i, 1.0 + 0.01 * (i % 3))
+    assert mon.record(12, 10.0)
+
+
+# --------------------------------------------------------------------------
+# FleetStragglerBoard: cross-device flagging
+# --------------------------------------------------------------------------
+
+def test_fleet_board_flags_slow_device():
+    board = FleetStragglerBoard(4, ratio=1.5)
+    for s in range(4):
+        for d in range(3):
+            board.record(d, s, 0.1)
+    assert board.record(3, 0, 1.0)            # 10x the fleet median
+    assert board.flagged == (3,)
+
+
+def test_fleet_board_unflags_recovered_device():
+    board = FleetStragglerBoard(2, window=4, ratio=1.5)
+    for s in range(4):
+        board.record(0, s, 0.1)
+    board.record(1, 0, 1.0)
+    assert 1 in board.flagged
+    for s in range(1, 5):                     # caught back up
+        board.record(1, s, 0.1)
+    assert board.flagged == ()
+
+
+def test_fleet_board_validates_device_count():
+    with pytest.raises(ValueError, match="n_devices"):
+        FleetStragglerBoard(0)
+
+
+# --------------------------------------------------------------------------
+# remesh_plan: validation + degraded-mode shapes
+# --------------------------------------------------------------------------
+
+def test_remesh_plan_shapes():
+    assert remesh_plan(8, model_parallel=4) == (2, 4)
+    assert remesh_plan(6, model_parallel=4) == (1, 4)
+    assert remesh_plan(3, model_parallel=4) == (1, 2)   # degraded
+    assert remesh_plan(1, model_parallel=4) == (1, 1)
+
+
+def test_remesh_plan_rejects_empty_fleet():
+    with pytest.raises(ValueError, match="n_devices"):
+        remesh_plan(0, model_parallel=4)
+    with pytest.raises(ValueError, match="model_parallel"):
+        remesh_plan(4, model_parallel=0)

@@ -1,0 +1,190 @@
+"""Reconstruction-fleet tests (subprocess: 8 forced host devices).
+
+The fleet shards the planner's step-major schedule across a device mesh
+(``PlanExecutor.execute_fleet``); these prove the four contracts on the
+no-hardware CI lane (``XLA_FLAGS=--xla_force_host_platform_device_count
+=8``, in a subprocess because the device count must be fixed before jax
+initializes — the main test process keeps the default single device):
+
+  * **parity** — the fleet reconstruction of a volume matches the
+    single-device step-major walk within tolerance (the origin folds
+    into the matrices INSIDE the fleet program, so float association
+    may differ from the host-side fold; disjoint boxes mean nothing
+    else can);
+  * **failover** — with one device's steps forcibly failed, the run
+    completes BIT-IDENTICALLY via re-run on surviving devices, the
+    struck device is retired, and its completion count is zero;
+  * **work stealing** — a straggling device's unclaimed steps migrate
+    (stolen > 0) with output still bit-identical;
+  * **poison step** — a step that fails everywhere exhausts its
+    per-step retry budget and aborts the run (an incomplete volume must
+    never be returned).
+
+The serving layer rides the same path: ``ReconService(devices="all")``
+buckets place every request across the fleet and surface steal/failover
+totals in their stats.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json, time, threading
+sys.path.insert(0, "src")
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core import standard_geometry
+from repro.core.fdk import _build_plan, fdk_reconstruct
+from repro.runtime.executor import (FleetConfig, PlanExecutor,
+                                    default_program_cache)
+from repro.runtime.service import ReconService
+
+out = {}
+out["n_devices"] = len(jax.local_devices())
+
+geom = standard_geometry(n=32, n_det=48, n_proj=16)
+rng = np.random.RandomState(0)
+projs = jnp.asarray(rng.rand(geom.n_proj, geom.nh,
+                             geom.nw).astype(np.float32))
+# (8, 8, nz) tiles -> 16 same-shape steps over 8 devices (2 each);
+# proj_batch=8 -> a 2-chunk scan grid inside each fleet program
+kw = dict(nb=8, interpret=True, tiling=(8, 8, geom.nz),
+          memory_budget=None, proj_batch=8, out="host", schedule="step")
+
+ref = np.asarray(fdk_reconstruct(
+    projs, geom, tiling=(8, 8, geom.nz), proj_batch=8, out="host"))
+
+def fleet_run(cfg):
+    ex = PlanExecutor(geom, _build_plan(geom, "algorithm1_mp", **kw),
+                      fleet=cfg)
+    vol = ex.reconstruct(projs)
+    return np.asarray(vol), ex.last_fleet_report
+
+# ---- parity: fleet == single-device step-major ---------------------------
+vol_fleet, rep = fleet_run(FleetConfig())
+scale = float(np.max(np.abs(ref))) or 1.0
+out["fleet_rel_err"] = float(np.max(np.abs(vol_fleet - ref))) / scale
+out["fleet_devices"] = rep.n_devices
+out["fleet_steps"] = rep.n_steps
+out["fleet_steps_covered"] = int(sum(rep.steps_by_device))
+
+# ---- failover: device 3's steps forcibly failed --------------------------
+def fail_dev3(device, step):
+    if device == 3:
+        raise RuntimeError("injected device fault")
+
+vol_fo, rep_fo = fleet_run(FleetConfig(step_hook=fail_dev3))
+out["failover_bit_identical"] = bool(np.array_equal(vol_fleet, vol_fo))
+out["failover_dead"] = list(rep_fo.dead_devices)
+out["failover_retried"] = rep_fo.retried
+out["failover_dev3_done"] = rep_fo.steps_by_device[3]
+out["failover_steps_covered"] = int(sum(rep_fo.steps_by_device))
+
+# ---- work stealing: device 0 straggles -----------------------------------
+def slow_dev0(device, step):
+    if device == 0:
+        time.sleep(1.0)
+
+vol_st, rep_st = fleet_run(FleetConfig(step_hook=slow_dev0))
+out["steal_bit_identical"] = bool(np.array_equal(vol_fleet, vol_st))
+out["steal_stolen"] = rep_st.stolen
+out["steal_flagged"] = list(rep_st.flagged_devices)
+
+# ---- poison step: fails on EVERY device -> abort, never a partial volume -
+def poison_step0(device, step):
+    if step == 0:
+        raise RuntimeError("injected poison step")
+
+try:
+    fleet_run(FleetConfig(step_hook=poison_step0, max_retries_per_step=2))
+    out["poison_raised"] = False
+except RuntimeError as e:
+    out["poison_raised"] = True
+    out["poison_msg"] = str(e)[:120]
+
+# ---- serving layer: buckets place requests across the fleet --------------
+svc = ReconService(max_inflight=2, devices="all")
+h1 = svc.submit(projs, geom, tiling=(8, 8, geom.nz), proj_batch=8)
+h2 = svc.submit(projs, geom, tiling=(8, 8, geom.nz), proj_batch=8)
+v1, v2 = np.asarray(h1.result()), np.asarray(h2.result())
+out["service_rel_err"] = float(np.max(np.abs(v1 - ref))) / scale
+out["service_repeat_identical"] = bool(np.array_equal(v1, v2)
+                                       and np.array_equal(v1, vol_fleet))
+stats = svc.stats()
+out["service_bucket_devices"] = stats.buckets[0].devices
+out["service_requests"] = stats.requests
+svc.close()
+
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def fleet_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT],
+                          capture_output=True, text=True, timeout=900,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))), env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][-1]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_fleet_runs_on_eight_devices(fleet_results):
+    assert fleet_results["n_devices"] == 8
+    assert fleet_results["fleet_devices"] == 8
+
+
+def test_fleet_matches_single_device(fleet_results):
+    """16 steps sharded over 8 devices reconstruct the same volume as
+    the single-device step-major walk (every step covered once)."""
+    assert fleet_results["fleet_rel_err"] < 1e-5
+    assert fleet_results["fleet_steps_covered"] == \
+        fleet_results["fleet_steps"]
+
+
+def test_fleet_failover_bit_identical(fleet_results):
+    """A device whose every step faults is retired after its strike
+    budget; its steps re-run on survivors and the output is
+    BIT-identical (disjoint boxes + identical per-step programs)."""
+    assert fleet_results["failover_bit_identical"]
+    assert 3 in fleet_results["failover_dead"]
+    assert fleet_results["failover_retried"] >= 1
+    assert fleet_results["failover_dev3_done"] == 0
+    assert fleet_results["failover_steps_covered"] == \
+        fleet_results["fleet_steps"]
+
+
+def test_fleet_steals_from_straggler(fleet_results):
+    """An idle device steals the straggling device's unclaimed steps;
+    migration never changes the output."""
+    assert fleet_results["steal_stolen"] >= 1
+    assert fleet_results["steal_bit_identical"]
+
+
+def test_fleet_poison_step_aborts(fleet_results):
+    """A step failing on EVERY device exhausts max_retries_per_step and
+    raises — a partial volume is never silently returned."""
+    assert fleet_results["poison_raised"]
+    assert "max_retries_per_step" in fleet_results.get("poison_msg", "")
+
+
+def test_service_places_buckets_across_fleet(fleet_results):
+    """ReconService(devices="all") routes bucket executors through
+    execute_fleet: correct volumes, repeat-identical, and the bucket
+    stats report the fleet width."""
+    assert fleet_results["service_rel_err"] < 1e-5
+    assert fleet_results["service_repeat_identical"]
+    assert fleet_results["service_bucket_devices"] == 8
+    assert fleet_results["service_requests"] == 2

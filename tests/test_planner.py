@@ -341,3 +341,69 @@ def test_facades_share_default_cache(setup):
     after = default_program_cache().stats()
     assert after["misses"] == before["misses"]
     assert after["hits"] > before["hits"]
+
+
+# --------------------------------------------------------------------------
+# fleet partition: the step schedule's shard axis
+# --------------------------------------------------------------------------
+
+def _fleet_steps(geom, n_tiles=4):
+    plan = plan_reconstruction(geom, "algorithm1_mp", tile_shape=(8, 8, 16),
+                               nb=4, proj_batch=4)
+    return plan, plan.steps
+
+
+def test_partition_steps_covers_disjointly(setup):
+    """Every step index lands in exactly one shard queue — the fleet's
+    correctness precondition (each output box written once)."""
+    from repro.runtime.planner import partition_steps
+    geom, *_ = setup
+    _, steps = _fleet_steps(geom)
+    for n_shards in (1, 2, 3, len(steps), len(steps) + 3):
+        fs = partition_steps(steps, n_shards)
+        seen = [i for q in fs.queues for i in q]
+        assert sorted(seen) == list(range(len(steps)))
+        assert fs.n_steps == len(steps)
+        assert len(fs.queues) == n_shards
+
+
+def test_partition_steps_deterministic_and_balanced(setup):
+    """Pure function of (steps, n_shards): same queues every call; LPT
+    keeps modeled per-shard load within one max-step of even."""
+    from repro.runtime.planner import partition_steps, step_cost
+    geom, *_ = setup
+    _, steps = _fleet_steps(geom)
+    a = partition_steps(steps, 3)
+    b = partition_steps(steps, 3)
+    assert a == b
+    worst = max(step_cost(s) for s in steps)
+    assert max(a.loads) - min(a.loads) <= worst
+
+
+def test_partition_more_shards_than_steps(setup):
+    """Spare devices get empty queues (they idle, stealing if work
+    appears) — never an error."""
+    from repro.runtime.planner import partition_steps
+    geom, *_ = setup
+    _, steps = _fleet_steps(geom)
+    fs = partition_steps(steps, len(steps) + 5)
+    assert sum(len(q) for q in fs.queues) == len(steps)
+    assert any(len(q) == 0 for q in fs.queues)
+
+
+def test_partition_validates_shard_count(setup):
+    from repro.runtime.planner import partition_steps
+    geom, *_ = setup
+    _, steps = _fleet_steps(geom)
+    with pytest.raises(ValueError, match="n_shards"):
+        partition_steps(steps, 0)
+
+
+def test_step_major_schedule_exposes_fleet(setup):
+    """StepMajorSchedule.fleet(n) is the executor's entry: it shards
+    the SAME StepWork list the single-device walk consumes."""
+    geom, *_ = setup
+    plan, steps = _fleet_steps(geom)
+    fs = plan.step_major.fleet(2)
+    assert fs.n_shards == 2
+    assert fs.n_steps == len(plan.step_major.steps)
