@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
-	bench-smoke bench-service bench-autotune bench-fleet test-fleet
+	bench-smoke bench-service bench-autotune bench-fleet test-fleet \
+	serve
 
 tier1:
 	tests/run_tier1.sh
@@ -36,3 +37,7 @@ test-fleet:                    # the multidevice CI lane, locally
 bench-smoke:                   # perf-trajectory snapshot (non-gating);
 	$(PY) -m benchmarks.bench_smoke --json auto \
 		--diff auto --warn-regress 0.25    # auto = next BENCH_PR<N>.json
+
+serve:                         # documented ReconService entrypoint:
+	scripts/serve_env.sh $(PY) examples/serve_recon.py  # tcmalloc,
+# quiet logs, f32, optional RECON_DEVICES=N fleet split (scripts/serve_env.sh)

@@ -26,6 +26,14 @@ tier-1's slow lane — not smoke material).
 A mixed-shape burst at the end exercises bucketing under FIFO traffic
 and prints the :class:`ServiceStats` snapshot.
 
+  3. **cross-request batching** — a same-bucket burst of k requests
+     through ``max_batch=k`` forms ONE ``execute_batch`` dispatch
+     stream instead of k dispatch sequences. Emitted as
+     ``service/batched_burst_k{1,2,4,8}`` with the AMORTIZED us/request
+     (wall / k) and realized occupancy; the k=1 row is the unbatched
+     baseline on the same bucket, and the acceptance bar is k=8
+     amortized strictly below it.
+
     PYTHONPATH=src python -m benchmarks.bench_service [--clinical]
 """
 
@@ -129,6 +137,50 @@ def run(n: int = 24, n_det: int = 32, n_proj: int = 16, nb: int = 4):
                 f"hit_rate={stats.hit_rate:.2f}")
     print(f"# {stats}")
     svc.close()
+
+    # ---- cross-request batching: amortized us/request vs k ---------------
+    batched_burst(geom, projs, opts)
+
+
+def batched_burst(geom, projs, opts, ks=(1, 2, 4, 8), repeats: int = 3):
+    """Amortized per-request cost of a k-deep same-bucket burst.
+
+    One service per k (its ``max_batch`` IS k), warmed so no compile
+    lands in the timed region; the burst is submitted in one go, so the
+    BatchFormer coalesces it without waiting (``max_wait_ms=0`` —
+    occupancy comes from queue depth alone, the serving steady state
+    under load). Median of ``repeats`` bursts, amortized = wall / k.
+    The k=1 service is the unbatched baseline on the same bucket.
+    """
+    amortized = {}
+    for k in ks:
+        svc = ReconService(max_inflight=1, max_batch=k,
+                           cache=ProgramCache())
+        svc.warmup([geom], **opts)
+        svc.reconstruct(projs, geom, **opts)     # absorb first-call costs
+        walls = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            futs = [svc.submit(projs, geom, **opts) for _ in range(k)]
+            for f in futs:
+                f.result()
+            walls.append(time.perf_counter() - t0)
+        walls.sort()
+        wall = walls[len(walls) // 2]
+        stats = svc.stats()
+        occ = stats.buckets[0].mean_occupancy
+        amortized[k] = wall / k * 1e6
+        common.emit(f"service/batched_burst_k{k}", amortized[k],
+                    f"amortized_us_per_request occupancy={occ} "
+                    f"dispatches={stats.buckets[0].dispatches}")
+        svc.close()
+    gain = amortized[ks[0]] / amortized[ks[-1]]
+    ok = amortized[ks[-1]] < amortized[ks[0]]
+    print(f"# batched burst: k={ks[-1]} amortized "
+          f"{amortized[ks[-1]]:.0f} us/req vs unbatched "
+          f"{amortized[ks[0]]:.0f} us/req -> {gain:.2f}x "
+          f"({'OK' if ok else 'FAIL'}: bar = strictly below unbatched)")
+    return amortized
 
 
 def run_clinical(n: int = 96, n_det: int = 128, n_proj: int = 48,

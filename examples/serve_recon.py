@@ -5,9 +5,15 @@ would: warm up the shape buckets a scanner fleet will send, then submit
 a burst of mixed-shape requests and watch every warm request reuse its
 bucket's cached plan + compiled programs (zero retracing) while the
 async step pipeline overlaps each tile step's device->host flush with
-the next step's scan dispatch.
+the next step's scan dispatch. With ``max_batch``/``max_wait_ms`` set,
+the BatchFormer additionally coalesces queued same-bucket requests
+into ONE batched dispatch stream (mixed buckets never cross-batch) —
+the per-bucket occupancy / amortized-cost stats at the end show the
+batching in action.
 
     PYTHONPATH=src python examples/serve_recon.py
+    # or with the process-level preset (tcmalloc, quiet logs):
+    make serve
 """
 
 import time
@@ -33,7 +39,10 @@ def main():
         phantom = jnp.asarray(shepp_logan_3d(geom.nx))
         projections[name] = forward_project(phantom, geom, oversample=2.0)
 
-    with ReconService(max_inflight=2) as svc:
+    # max_batch: up to 4 same-bucket requests share one dispatch
+    # stream; max_wait_ms: a partial batch may hold the queue head up
+    # to 5 ms for late same-bucket peers (deadline/priority aware)
+    with ReconService(max_inflight=2, max_batch=4, max_wait_ms=5.0) as svc:
         # 1. warmup: pay every compile before the first request lands
         t0 = time.perf_counter()
         svc.warmup([geom_a, geom_b], **opts)
@@ -62,15 +71,23 @@ def main():
               f"fdk_reconstruct(service=...) matches: "
               f"{np.allclose(np.asarray(via), np.asarray(ref), atol=1e-5)}")
 
-        # 4. the snapshot a dashboard would scrape
+        # 4. the snapshot a dashboard would scrape — including batch
+        #    occupancy (requests per dispatch; mixed buckets batch
+        #    independently) and the amortized per-request cost
         stats = svc.stats()
         print(f"stats: requests={stats.requests} "
               f"bucket hit-rate={stats.hit_rate:.2f} "
+              f"dispatches={stats.dispatches} "
+              f"occupancy={stats.mean_occupancy} "
               f"cache={stats.cache}")
         for b in stats.buckets:
             print(f"  bucket {b.variant} vol={b.vol_shape_xyz} "
                   f"np={b.n_proj}: requests={b.requests} hits={b.hits} "
-                  f"programs_built={b.programs_built}")
+                  f"programs_built={b.programs_built} "
+                  f"max_batch={b.max_batch} "
+                  f"dispatches={b.dispatches} "
+                  f"occupancy={b.mean_occupancy} "
+                  f"amortized_us/req={b.amortized_us_per_request}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Process-level serving preset for ReconService deployments.
+#
+# The engine-level optimizations (step-major scan, async flush, fleet,
+# cross-request batching) all live inside the process; this script owns
+# the knobs OUTSIDE it — allocator, logging, and XLA host-device layout
+# — so `make serve` (or any entrypoint sourcing this file) starts from
+# a known-good runtime. Usage:
+#
+#   scripts/serve_env.sh python examples/serve_recon.py   # exec a cmd
+#   source scripts/serve_env.sh                           # just the env
+#
+# Every knob is override-able: set it before invoking and the preset
+# keeps your value.
+
+# --- allocator: tcmalloc when present -----------------------------------
+# CPU reconstruction is large-allocation heavy (volume accumulators,
+# stacked filtered chunk grids); glibc malloc's page-faulting hurts the
+# streaming paths. Preload tcmalloc when the host has it; silently keep
+# the default allocator otherwise (CI containers often lack it).
+if [ -z "${LD_PRELOAD:-}" ]; then
+    for _tcm in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+                /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+        if [ -e "${_tcm}" ]; then
+            export LD_PRELOAD="${_tcm}"
+            break
+        fi
+    done
+    unset _tcm
+fi
+# volumes are legitimately huge: suppress tcmalloc's large-alloc report
+# (60 GB threshold) so serving logs stay signal-only
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+
+# --- logging: errors only ----------------------------------------------
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# --- precision: f32 by default, no silent x64 promotion ----------------
+export JAX_ENABLE_X64="${JAX_ENABLE_X64:-0}"
+export JAX_DEFAULT_DTYPE_BITS="${JAX_DEFAULT_DTYPE_BITS:-32}"
+
+# --- XLA host-device layout --------------------------------------------
+# RECON_DEVICES=N splits the host CPU into N XLA devices so
+# ReconService(devices=...) / PlanExecutor.execute_fleet can shard the
+# step schedule (the multidevice CI lane runs with 8). Unset = XLA's
+# single host device; deployments pair this with the service's
+# max_inflight/max_batch so fleet width x inflight stays <= cores.
+if [ -n "${RECON_DEVICES:-}" ]; then
+    export XLA_FLAGS="--xla_force_host_platform_device_count=${RECON_DEVICES} ${XLA_FLAGS:-}"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# exec the wrapped command when invoked with one (no-op when sourced)
+if [ "$#" -gt 0 ]; then
+    exec "$@"
+fi

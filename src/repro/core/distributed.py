@@ -23,7 +23,7 @@ reduction per batch).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,7 +112,8 @@ def make_distributed_bp(geom: CTGeometry, mesh, *, nb: int = 32,
 
 def make_fleet_bp(variant: str, call_shape: Tuple[int, int, int], *,
                   nb: int, n_chunks: int, chunk_size: int,
-                  options=(), interpret: bool = True):
+                  options=(), interpret: bool = True,
+                  rb: Optional[int] = None):
     """Per-device step program for the reconstruction fleet
     (``runtime.executor.PlanExecutor.execute_fleet``).
 
@@ -120,6 +121,13 @@ def make_fleet_bp(variant: str, call_shape: Tuple[int, int, int], *,
     / ``mat_s`` are the stacked scan grids ``(n_chunks, chunk_size,
     ...)`` and ``origin`` is the step's sub-box origin ``(i0, j0,
     k_off)`` as a traced (3,) f32 array.
+
+    ``rb`` (cross-request batching) adds a leading request axis: the
+    program becomes ``prog(img_b, mat_s, origin) -> vol_b((rb,) +
+    call_shape)`` with ``img_b`` of shape ``(rb, n_chunks, chunk_size,
+    ...)`` — one ``vmap`` lane per batched request over the SAME
+    origin-folded scan, so per-lane output is bit-identical to the
+    rb=None program and one dispatch serves k requests' step.
 
     This is :func:`make_distributed_bp`'s translated-matrix trick lifted
     from mesh slabs to the fleet's per-device step queues: the origin
@@ -145,7 +153,7 @@ def make_fleet_bp(variant: str, call_shape: Tuple[int, int, int], *,
     shape = tuple(call_shape)
     fn = spec.fn
     if spec.jittable:
-        def prog(img_s, mat_s, origin):
+        def one(img_s, mat_s, origin):
             mat_s = translate_matrices(mat_s, origin[0], origin[1],
                                        origin[2])
 
@@ -156,15 +164,22 @@ def make_fleet_bp(variant: str, call_shape: Tuple[int, int, int], *,
             acc, _ = jax.lax.scan(
                 body, jnp.zeros(shape, jnp.float32), (img_s, mat_s))
             return acc
-        return jax.jit(prog)
+        if rb is None:
+            return jax.jit(one)
+        return jax.jit(jax.vmap(one, in_axes=(0, None, None)))
 
     def prog(img_s, mat_s, origin):
         mat_t = translate_matrices(mat_s, origin[0], origin[1], origin[2])
-        acc = None
-        for c in range(int(n_chunks)):
-            part = fn(img_s[c], mat_t[c], shape, **opts)
-            acc = part if acc is None else acc + part
-        return acc
+
+        def lane(img_l):
+            acc = None
+            for c in range(int(n_chunks)):
+                part = fn(img_l[c], mat_t[c], shape, **opts)
+                acc = part if acc is None else acc + part
+            return acc
+        if rb is None:
+            return lane(img_s)
+        return jnp.stack([lane(img_s[r]) for r in range(int(rb))])
     return prog
 
 

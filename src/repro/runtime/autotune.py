@@ -169,6 +169,12 @@ class TunedConfig:
     out: str                            # "host" | "device"
     interpret: bool
     options: Tuple[Tuple[str, object], ...] = ()
+    # cross-request batch cap (service-tier rb): how many same-bucket
+    # requests the BatchFormer may coalesce into one dispatch stream
+    # under this config. Order-only per lane (vmap adds an axis, never
+    # reassociates a lane's reductions), so it is searched even in
+    # exact mode; wall_us under max_batch > 1 is AMORTIZED per request.
+    max_batch: int = 1
     wall_us: float = 0.0
     baseline_us: float = 0.0
     source: str = "heuristic"           # "measured" | "cache" | "heuristic"
@@ -179,7 +185,8 @@ class TunedConfig:
         """Knob identity (measurement/bookkeeping fields excluded)."""
         return (self.variant, self.schedule, self.pipeline,
                 self.pipeline_depth, self.tile_shape, self.proj_batch,
-                self.nb, self.out, self.interpret, self.options)
+                self.nb, self.out, self.interpret, self.options,
+                self.max_batch)
 
     @property
     def speedup(self) -> float:
@@ -193,7 +200,7 @@ class TunedConfig:
             geom, self.variant, tile_shape=self.tile_shape, nb=self.nb,
             proj_batch=self.proj_batch, out=self.out,
             interpret=self.interpret, schedule=self.schedule,
-            **dict(self.options))
+            request_batch=self.max_batch, **dict(self.options))
 
     def to_json(self) -> Dict:
         doc = dataclasses.asdict(self)
@@ -210,6 +217,8 @@ class TunedConfig:
             (str(k), _tupleize(v)) for k, v in doc.get("options", []))
         pb = doc.get("proj_batch")
         kw["proj_batch"] = None if pb is None else int(pb)
+        # pre-batching cache entries lack the field: default to 1
+        kw["max_batch"] = int(doc.get("max_batch", 1))
         return cls(**kw)
 
 
@@ -223,7 +232,8 @@ def config_from_plan(plan, *, pipeline: str = "sync",
         pipeline_depth=int(pipeline_depth), tile_shape=plan.tile_shape,
         proj_batch=(plan.chunk_size if plan.streams_projections else None),
         nb=plan.nb, out=plan.out, interpret=plan.interpret,
-        options=plan.options, source=source)
+        options=plan.options, source=source,
+        max_batch=int(plan.request_batch))
 
 
 # --------------------------------------------------------------------------
@@ -449,21 +459,29 @@ def resolve_config(geom, variant: str = "auto", *, cache=None,
 
 def resolve_plan(geom, *, variant="auto", tuning=None, tile_shape=None,
                  memory_budget=None, nb=8, proj_batch=None, out="host",
-                 interpret=True, schedule=None, **kernel_options):
+                 interpret=True, schedule=None, request_batch=1,
+                 **kernel_options):
     """Planner-level twin of :func:`resolve_config` (planner argument
     conventions; returns the plan only — the executor-level pipeline
     choice needs :func:`resolve_config`). This is what
-    ``plan_reconstruction(variant="auto" / tuning=...)`` delegates to."""
+    ``plan_reconstruction(variant="auto" / tuning=...)`` delegates to.
+    The caller's ``request_batch`` overrides a cached winner's
+    ``max_batch`` on the returned plan (rb is an execution multiplicity
+    the caller commits to, not a shape fact — ``bucket_key`` ignores
+    it either way)."""
     from repro.runtime.planner import plan_reconstruction
     cache = as_tuning_cache(tuning)
     name = _DEFAULT_VARIANT if variant in (None, "auto") else variant
     base = plan_reconstruction(
         geom, name, tile_shape=tile_shape, memory_budget=memory_budget,
         nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
-        schedule=schedule, **_base_kernel_options(variant, kernel_options))
+        schedule=schedule, request_batch=request_batch,
+        **_base_kernel_options(variant, kernel_options))
     hit = cache.lookup(fingerprint_key(),
                        _request_key(variant, base, kernel_options))
-    return hit.build_plan(geom) if hit is not None else base
+    if hit is None:
+        return base
+    return hit.build_plan(geom).batched(int(request_batch))
 
 
 # --------------------------------------------------------------------------
@@ -479,20 +497,36 @@ def _measure_config(geom, config: TunedConfig, projections,
     region (the cache makes repeat candidates nearly free), then
     ``warmup`` untimed calls absorb first-call allocation effects and
     the median of ``iters`` timed calls is returned.
+
+    ``config.max_batch > 1`` measures the BATCHED path — one
+    ``execute_batch`` of max_batch copies of the projections — and
+    returns wall / max_batch: the amortized per-request time, directly
+    comparable against the unbatched candidates so the sweep picks the
+    rb sweet spot (or rejects batching where vmap pressure eats the
+    dispatch saving on this hardware).
     """
     import jax
     from repro.runtime.executor import PlanExecutor
     ex = PlanExecutor.from_config(geom, config, cache=program_cache)
     ex.warm()
+    rb = max(1, int(config.max_batch))
+    if rb > 1:
+        if not ex.supports_request_batching:
+            raise ValueError("config cannot batch (chunk-major plan)")
+        ex.warm_batch(rb)
+        reqs = [projections] * rb
+        run = lambda: ex.execute_batch(reqs)      # noqa: E731
+    else:
+        run = lambda: ex.reconstruct(projections)  # noqa: E731
     for _ in range(int(warmup)):
-        jax.block_until_ready(ex.reconstruct(projections))
+        jax.block_until_ready(run())
     times = []
     for _ in range(max(1, int(iters))):
         t0 = time.perf_counter()
-        jax.block_until_ready(ex.reconstruct(projections))
+        jax.block_until_ready(run())
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return times[len(times) // 2] / rb
 
 
 # --------------------------------------------------------------------------
@@ -609,6 +643,20 @@ def _schedule_axis(cur: TunedConfig, memory_budget: Optional[int],
             for s in allowed if s != cur.schedule]
 
 
+def _batch_axis(cur: TunedConfig) -> List[TunedConfig]:
+    """Cross-request batch cap candidates (the service-tier rb sweet
+    spot). Only step-major plans batch; per-lane output is
+    bit-identical to unbatched (vmap adds an axis, never reassociates
+    a lane), so this axis is searched even in exact mode. Candidates
+    are measured AMORTIZED (wall / rb — see :func:`_measure_config`),
+    so rb only wins where one dispatch genuinely serves rb requests
+    cheaper than rb dispatches."""
+    if cur.schedule != "step":
+        return []
+    return [dataclasses.replace(cur, max_batch=rb)
+            for rb in (1, 2, 4, 8) if rb != cur.max_batch]
+
+
 def _pipeline_axis(cur: TunedConfig) -> List[TunedConfig]:
     if cur.out != "host":
         return []    # the flush pipeline only exists for host placement
@@ -700,6 +748,7 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
         axes.append(lambda c: _chunk_axis(geom, c, memory_budget))
     axes.append(lambda c: _schedule_axis(c, memory_budget, pinned=schedule))
     axes.append(_pipeline_axis)
+    axes.append(_batch_axis)
 
     for axis in axes:
         for cand in axis(best):

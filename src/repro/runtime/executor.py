@@ -174,6 +174,60 @@ class ProgramCache:
 
         return self.get_or_build(key, build)
 
+    def batch_scan_program(self, variant: str,
+                           call_shape: Tuple[int, int, int],
+                           nb: int, dtype: str, interpret: bool,
+                           options: Tuple = (), *, n_chunks: int,
+                           chunk_size: int, rb: int) -> Callable:
+        """rb-batched step-major megaprogram: ``prog(img_b, mat_s) ->
+        vol_b((rb,) + call_shape)`` where ``img_b`` stacks ``rb``
+        requests' scan grids ``(rb, n_chunks, chunk_size, ...)`` and
+        ``mat_s`` is the SHARED chunk-stacked matrix grid (same-bucket
+        requests share the geometry, so one matrix stack serves all
+        lanes).
+
+        One leading ``vmap`` axis over projections + accumulators turns
+        k queued reconstructions into ONE dispatch of the same scanned
+        program — per-lane float-op order is untouched, so each lane is
+        bit-identical to the single-request scan program (asserted in
+        tests/test_batching.py). Non-jittable kernels (banded_pl) fall
+        back to a stacked python loop over lanes with the donated-carry
+        chunk walk preserved: still one executor call per step, the
+        dispatch amortization just stops at the program boundary.
+        """
+        key = ("batch_scan", variant, tuple(call_shape), int(nb),
+               str(dtype), bool(interpret), tuple(options), int(n_chunks),
+               int(chunk_size), int(rb))
+
+        def build():
+            spec = get_spec(variant)
+            opts = spec.resolve_options(
+                {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
+            shape = tuple(call_shape)
+            fn = spec.fn
+            if spec.jittable:
+                def one(img_s, mat_s):
+                    def body(acc, xs):
+                        img_c, mat_c = xs
+                        return acc + fn(img_c, mat_c, shape, **opts), None
+                    acc, _ = jax.lax.scan(
+                        body, jnp.zeros(shape, jnp.float32), (img_s, mat_s))
+                    return acc
+                return jax.jit(jax.vmap(one, in_axes=(0, None)))
+
+            def prog(img_b, mat_s):
+                lanes = []
+                for r in range(int(rb)):
+                    acc = None
+                    for c in range(int(n_chunks)):
+                        part = fn(img_b[r, c], mat_s[c], shape, **opts)
+                        acc = part if acc is None else _acc_add(acc, part)
+                    lanes.append(acc)
+                return jnp.stack(lanes)
+            return prog
+
+        return self.get_or_build(key, build)
+
     def fleet_program(self, variant: str, call_shape: Tuple[int, int, int],
                       nb: int, dtype: str, interpret: bool,
                       options: Tuple = (), *, n_chunks: int,
@@ -194,6 +248,31 @@ class ProgramCache:
                 variant, tuple(call_shape), nb=int(nb),
                 n_chunks=int(n_chunks), chunk_size=int(chunk_size),
                 options=tuple(options), interpret=bool(interpret))
+
+        return self.get_or_build(key, build)
+
+    def batch_fleet_program(self, variant: str,
+                            call_shape: Tuple[int, int, int],
+                            nb: int, dtype: str, interpret: bool,
+                            options: Tuple = (), *, n_chunks: int,
+                            chunk_size: int, rb: int) -> Callable:
+        """rb-batched fleet step program: ``prog(img_b, mat_s, origin)
+        -> vol_b((rb,) + call_shape)`` — :meth:`fleet_program`'s
+        origin-traced scan with the leading request axis of
+        :meth:`batch_scan_program`, so a fleet drains k batched
+        requests' step schedule with one dispatch per (device, step)
+        and stealing/failover still never recompile."""
+        key = ("batch_fleet", variant, tuple(call_shape), int(nb),
+               str(dtype), bool(interpret), tuple(options), int(n_chunks),
+               int(chunk_size), int(rb))
+
+        def build():
+            from repro.core.distributed import make_fleet_bp
+            return make_fleet_bp(
+                variant, tuple(call_shape), nb=int(nb),
+                n_chunks=int(n_chunks), chunk_size=int(chunk_size),
+                options=tuple(options), interpret=bool(interpret),
+                rb=int(rb))
 
         return self.get_or_build(key, build)
 
@@ -275,9 +354,15 @@ class _AsyncFlushQueue:
     flushing one); a full queue applies backpressure to the dispatcher.
     Exactly one thread writes the host volume, and steps write disjoint
     regions, so the result is bit-identical to the sequential flush.
+
+    Writes are ``(slices, device piece)`` pairs into the constructor's
+    volume, or ``(target volume, slices, piece)`` triples — the
+    rb-batched step walk flushes one step's output into rb DIFFERENT
+    per-request volumes through one queue, preserving the single-writer
+    / FIFO discipline across all of them.
     """
 
-    def __init__(self, vol: np.ndarray, depth: int = 2):
+    def __init__(self, vol: Optional[np.ndarray], depth: int = 2):
         self._vol = vol
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(depth)))
         self._error: Optional[BaseException] = None
@@ -292,9 +377,11 @@ class _AsyncFlushQueue:
                 if writes is None:
                     return
                 if self._error is None:   # keep consuming after failure
-                    for sl, piece in writes:
+                    for w in writes:
+                        tgt, sl, piece = (w if len(w) == 3
+                                          else (self._vol, w[0], w[1]))
                         piece = jax.block_until_ready(piece)
-                        self._vol[sl] += np.asarray(piece)
+                        tgt[sl] += np.asarray(piece)
             except BaseException as exc:   # surfaced at put()/close()
                 self._error = exc
             finally:
@@ -557,6 +644,20 @@ class PlanExecutor:
                                         n_chunks=sched.n_chunks,
                                         chunk_size=sched.chunk_size)
 
+    def _batch_scan_program(self, variant: str, call_shape,
+                            sched: StepMajorSchedule, rb: int) -> Callable:
+        return self.cache.batch_scan_program(
+            variant, call_shape, self.plan.nb, "float32",
+            self.plan.interpret, self.plan.options,
+            n_chunks=sched.n_chunks, chunk_size=sched.chunk_size, rb=rb)
+
+    def _batch_fleet_program(self, variant: str, call_shape,
+                             sched: StepMajorSchedule, rb: int) -> Callable:
+        return self.cache.batch_fleet_program(
+            variant, call_shape, self.plan.nb, "float32",
+            self.plan.interpret, self.plan.options,
+            n_chunks=sched.n_chunks, chunk_size=sched.chunk_size, rb=rb)
+
     def warm(self) -> Dict[str, int]:
         """Compile every distinct program the plan needs; return stats."""
         if self.fleet is not None:
@@ -572,6 +673,28 @@ class PlanExecutor:
         else:
             for variant, shape in self.plan.program_keys:
                 self._program(variant, shape)
+        return self.cache.stats()
+
+    @property
+    def supports_request_batching(self) -> bool:
+        """Whether :meth:`execute_batch` can coalesce k requests into
+        one dispatch stream here. True for step-major plans (the scan
+        megaprogram takes the leading ``vmap`` lane); chunk-major plans
+        fall back to sequential execution in the service."""
+        return self.plan.schedule == "step"
+
+    def warm_batch(self, rb: int) -> Dict[str, int]:
+        """Compile the rb-batched program per (variant, shape) so the
+        first formed batch of ``rb`` requests compiles nothing. No-op
+        for plans that don't support request batching."""
+        if rb < 2 or not self.supports_request_batching:
+            return self.cache.stats()
+        sched = self.plan.step_major
+        for variant, shape in self.plan.program_keys:
+            if self.fleet is not None:
+                self._batch_fleet_program(variant, shape, sched, rb)
+            else:
+                self._batch_scan_program(variant, shape, sched, rb)
         return self.cache.stats()
 
     # ---- execute-stage helpers ------------------------------------------
@@ -704,7 +827,65 @@ class PlanExecutor:
             vol[sl] += np.asarray(piece)
         return vol
 
-    def execute_fleet(self, vol: np.ndarray, img_s: jnp.ndarray,
+    def _execute_step_major_batch(self, vols, img_b: jnp.ndarray,
+                                  mat_s: jnp.ndarray,
+                                  sched: StepMajorSchedule):
+        """rb-batched step-major walk: per step, ONE dispatch of the
+        vmapped scan megaprogram fills this step's box in ALL ``rb``
+        per-request volumes.
+
+        ``img_b`` stacks the rb requests' scan grids ``(rb, n_chunks,
+        chunk_size, ...)``; ``mat_s`` is shared (same bucket == same
+        geometry). Flush discipline mirrors :meth:`_execute_step_major`
+        exactly — async flusher thread or in-thread double buffer —
+        with each step's writes fanned out to the rb host volumes
+        (the flusher's 3-tuple ``(target, slices, piece)`` form), so
+        per-lane accumulation order equals the sequential walk and the
+        result is bit-identical to rb separate runs.
+        """
+        plan = self.plan
+        host = plan.out == "host"
+        rb = len(vols)
+
+        def fanout(step, out_b):
+            return tuple((vols[r], sl, piece)
+                         for r in range(rb)
+                         for sl, piece in self._step_writes(step, out_b[r]))
+
+        if host and self.pipeline == "async":
+            flush = _AsyncFlushQueue(None, depth=self.pipeline_depth)
+            try:
+                for work in sched.steps:
+                    step = work.step
+                    prog = self._batch_scan_program(
+                        step.variant, step.call_shape, sched, rb)
+                    out = prog(img_b, self._translated(mat_s, step))
+                    flush.put(fanout(step, out))
+            finally:
+                flush.close()
+            return vols
+        pending = ()
+        for work in sched.steps:
+            step = work.step
+            prog = self._batch_scan_program(step.variant, step.call_shape,
+                                            sched, rb)
+            out = prog(img_b, self._translated(mat_s, step))
+            if host:
+                for tgt, sl, piece in pending:
+                    tgt[sl] += np.asarray(piece)
+                pending = fanout(step, out)
+            else:
+                for r in range(rb):
+                    for (i_s, j_s, k_s), piece in self._step_writes(
+                            step, out[r]):
+                        idx = jnp.asarray(
+                            [i_s.start, j_s.start, k_s.start], jnp.int32)
+                        vols[r] = _place_device_add(vols[r], piece, idx)
+        for tgt, sl, piece in pending:
+            tgt[sl] += np.asarray(piece)
+        return vols
+
+    def execute_fleet(self, vol, img_s: jnp.ndarray,
                       mat_s: jnp.ndarray, sched: StepMajorSchedule, *,
                       fleet: Optional[FleetConfig] = None) -> np.ndarray:
         """Shard a step-major schedule across a device fleet.
@@ -731,8 +912,18 @@ class PlanExecutor:
         contract); exceeding it raises (a poison step would corrupt the
         volume). A device accumulating ``device_strikes`` failures is
         retired and its remaining queue drains to the survivors.
+
+        ``vol`` may be a LIST of rb host volumes (the batched path):
+        ``img_s`` then carries a leading request axis and each step's
+        batched output fans out to every lane's disjoint box — one
+        dispatch per (device, step) serves all rb requests, and the
+        stealing/failover machinery is untouched (a retried batched
+        step re-runs all lanes; still idempotent, the writes were
+        never flushed).
         """
         cfg = fleet if fleet is not None else (self.fleet or FleetConfig())
+        vols = list(vol) if isinstance(vol, (list, tuple)) else None
+        rb = len(vols) if vols is not None else None
         devices = cfg.resolve_devices()
         n_dev = len(devices)
         steps = tuple(w.step for w in sched.steps)
@@ -801,8 +992,12 @@ class PlanExecutor:
                         # never pays the copy
                         img_d = jax.device_put(img_s, dev)
                         mat_d = jax.device_put(mat_s, dev)
-                    prog = self._fleet_program(step.variant,
-                                               step.call_shape, sched)
+                    prog = (self._fleet_program(step.variant,
+                                                step.call_shape, sched)
+                            if rb is None else
+                            self._batch_fleet_program(step.variant,
+                                                      step.call_shape,
+                                                      sched, rb))
                     origin = jax.device_put(
                         jnp.asarray([step.i0, step.j0, step.k_off],
                                     jnp.float32), dev)
@@ -827,8 +1022,13 @@ class PlanExecutor:
                 # flush the step's disjoint writes; order across steps
                 # is irrelevant (disjoint boxes into a zeroed volume)
                 with flush_lock:
-                    for sl, piece in self._step_writes(step, out):
-                        vol[sl] += np.asarray(piece)
+                    if rb is None:
+                        for sl, piece in self._step_writes(step, out):
+                            vol[sl] += np.asarray(piece)
+                    else:
+                        for r in range(rb):
+                            for sl, piece in self._step_writes(step, out[r]):
+                                vols[r][sl] += np.asarray(piece)
                 board.record(d, idx, dur)
                 with cond:
                     counts["outstanding"] -= 1
@@ -1026,6 +1226,72 @@ class PlanExecutor:
             # transpose is a free numpy view, never round-trip it
             return np.transpose(vol, (2, 1, 0))
         return bp.volume_to_native(vol)
+
+    def execute_batch(self, projections_seq: Sequence[jnp.ndarray]):
+        """Reconstruct k same-bucket requests with ONE dispatch stream.
+
+        ``projections_seq`` holds k raw projection stacks, each exactly
+        what :meth:`reconstruct` takes. Per-request filtering runs
+        unchanged (identical code path, identical float-op order), the
+        k filtered scan grids are stacked onto a leading request axis,
+        and every step of the step-major walk dispatches the rb-batched
+        megaprogram once instead of k times — cross-request batching
+        amortizes the per-dispatch fixed cost the same way the in-batch
+        ``nb`` axis amortizes per-projection cost (paper O5, lifted to
+        the service tier). The matrix stack is shared across lanes
+        (same bucket == same geometry + chunk grid). Output is a list
+        of k volumes, each BIT-IDENTICAL to ``reconstruct`` on that
+        request alone (``vmap`` adds an axis, it never reassociates
+        the per-lane reductions — asserted in tests/test_batching.py).
+
+        Requires a step-major plan (``supports_request_batching``);
+        k == 1 just delegates to :meth:`reconstruct`.
+        """
+        reqs = list(projections_seq)
+        k = len(reqs)
+        if k == 0:
+            return []
+        if k == 1:
+            return [self.reconstruct(reqs[0])]
+        plan = self.plan
+        if not self.supports_request_batching:
+            raise ValueError(
+                "execute_batch amortizes dispatch over the step-major "
+                "scan; plan with schedule='step', got "
+                f"{plan.schedule!r} (callers should check "
+                "supports_request_batching and fall back to sequential "
+                "reconstruct calls)")
+        for p in reqs:
+            if p.shape[0] != plan.n_proj:
+                raise ValueError(
+                    f"execute_batch expects {plan.n_proj} projections "
+                    f"per request (the plan's full scan), got "
+                    f"{p.shape[0]}")
+        mat_p = _pad_mats(projection_matrices(self.geom),
+                          plan.n_proj_padded)
+        sched = plan.step_major
+        lanes = []
+        mat_s = None
+        for p in reqs:
+            img_s, mat_s = _FilteredChunkProducer(
+                self, p, mat_p).stacked(sched)
+            lanes.append(img_s)
+        img_b = jnp.stack(lanes)
+        del lanes
+        if self.fleet is not None:
+            vols = [self._alloc() for _ in range(k)]
+            self.execute_fleet(vols, img_b, mat_s, sched)
+            return [np.transpose(v, (2, 1, 0)) for v in vols]
+        if self._single_full_call() and plan.out == "device":
+            step = plan.steps[0]
+            acc = self._batch_scan_program(
+                step.variant, step.call_shape, sched, k)(img_b, mat_s)
+            return [bp.volume_to_native(acc[r]) for r in range(k)]
+        vols = self._execute_step_major_batch(
+            [self._alloc() for _ in range(k)], img_b, mat_s, sched)
+        if isinstance(vols[0], np.ndarray):
+            return [np.transpose(v, (2, 1, 0)) for v in vols]
+        return [bp.volume_to_native(v) for v in vols]
 
     # ---- cluster composition (iFDK scale-out x tiles) --------------------
 

@@ -255,6 +255,14 @@ class ReconPlan:
     steps: Tuple[PlanStep, ...]
     options: Tuple[Tuple[str, object], ...] = ()
     schedule: str = "step"                # "step" | "chunk"
+    # rb: how many same-bucket REQUESTS one execution carries as a
+    # leading batch axis (cross-request batching — the service-level
+    # second tier of the paper's nb in-batch trick). Deliberately NOT
+    # part of bucket_key: same-bucket requests of any arrival order are
+    # batchable, and the bucket identity must not fragment on how many
+    # of them happened to coalesce. It DOES scale the working-set model
+    # (every projection stack and accumulator is rb-deep).
+    request_batch: int = 1
 
     # ---- derived schedules / introspection --------------------------------
 
@@ -296,7 +304,10 @@ class ReconPlan:
         buckets on ``(geometry, plan.bucket_key)``. The derived
         ``steps``/``chunks`` are deterministic functions of these
         fields, so they are deliberately excluded — the key stays a
-        flat tuple of scalars/short tuples.
+        flat tuple of scalars/short tuples. ``request_batch`` is also
+        excluded ON PURPOSE: rb is an execution multiplicity over the
+        same compiled shape family, and batching only works if k
+        same-bucket requests land in ONE bucket.
         """
         return (self.vol_shape_xyz, self.det_shape_wh, self.variant,
                 self.tile_shape, self.nb, self.n_proj, self.n_proj_padded,
@@ -305,10 +316,25 @@ class ReconPlan:
 
     @property
     def working_set_bytes(self) -> int:
-        """Peak modeled working set over all planned kernel calls."""
-        return max(tile_working_set_bytes(
+        """Peak modeled working set over all planned kernel calls,
+        scaled by ``request_batch``: an rb-batched execution carries rb
+        projection stacks and rb accumulators through every call, so
+        the memory-budget contract must bill all of them."""
+        return self.request_batch * max(tile_working_set_bytes(
             s.call_shape, self.det_shape_wh, nb=self.nb)
             for s in self.steps)
+
+    def batched(self, request_batch: int) -> "ReconPlan":
+        """This plan with a ``request_batch`` leading axis of ``rb``
+        requests (same ``bucket_key`` — see above). The schedule is
+        unchanged: the executor's rb-batched programs vmap/stack the
+        SAME step-major scan over the request axis."""
+        rb = int(request_batch)
+        if rb < 1:
+            raise ValueError(f"request_batch must be >= 1, got {rb}")
+        if rb == self.request_batch:
+            return self
+        return dataclasses.replace(self, request_batch=rb)
 
     def kernel_options(self) -> Dict:
         return dict(self.options)
@@ -373,6 +399,7 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
                         out: str = "host",
                         interpret: bool = True,
                         schedule: Optional[str] = None,
+                        request_batch: int = 1,
                         tuning=None,
                         **kernel_options) -> ReconPlan:
     """Build the :class:`ReconPlan` every entry point executes.
@@ -398,6 +425,13 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         ``memory_budget`` — the caller's byte-bound contract — resolves
         to "chunk" (whose residency the per-call working-set model
         soundly describes); everything else resolves to "step".
+    request_batch : rb, the cross-request batch width this plan is
+        sized for (>= 1; default 1 = the single-request plan). rb is
+        NOT part of the bucket identity, but it scales the working-set
+        math: the tile auto-picker sees ``memory_budget // rb`` (rb
+        accumulators + projection stacks must fit together) and the
+        explicit-tile validation bills the rb-scaled working set, so
+        the byte contract stays honest under batching.
     tuning : opt-in to the measured autotuner's persisted winners
         (``runtime.autotune``): a ``TuningCache``, a cache-file path,
         or None. With ``variant="auto"`` (or any non-None ``tuning``)
@@ -420,8 +454,12 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
             geom, variant=variant, tuning=tuning, tile_shape=tile_shape,
             memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
             out=out, interpret=interpret, schedule=schedule,
-            **kernel_options)
+            request_batch=request_batch, **kernel_options)
     spec = get_spec(variant)
+    request_batch = int(request_batch)
+    if request_batch < 1:
+        raise ValueError(
+            f"request_batch must be >= 1, got {request_batch}")
     if out not in ("host", "device"):
         raise ValueError(f"out must be 'host' or 'device', got {out!r}")
     if schedule not in (None, "step", "chunk"):
@@ -450,8 +488,12 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
     tile_given = tile_shape is not None
     if tile_shape is None:
         if memory_budget is not None:
+            # rb batched executions carry rb working sets at once: the
+            # auto-picker must size ONE against budget/rb so all rb
+            # together honor the caller's byte contract
             tile_shape = pick_tile_shape(
-                (nx, ny, nz), (geom.nw, geom.nh), int(memory_budget),
+                (nx, ny, nz), (geom.nw, geom.nh),
+                max(1, int(memory_budget) // request_batch),
                 nb=nb, pair_z=spec.uses_symmetry)
         else:
             tile_shape = (nx, ny, nz)
@@ -469,7 +511,7 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         n_proj=n_proj, n_proj_padded=n_pad, chunk_size=chunk,
         out=out, interpret=interpret, steps=steps,
         options=tuple(sorted(spec.resolve_options(kernel_options).items())),
-        schedule=schedule)
+        schedule=schedule, request_batch=request_batch)
 
     if tile_given and memory_budget is not None and \
             plan.working_set_bytes > int(memory_budget):

@@ -28,6 +28,18 @@ exploits it:
     drained by ``max_inflight`` worker threads: admission order is
     completion-start order (no shape starves another), and at most
     ``max_inflight`` reconstructions hold device memory at once.
+  * **cross-request batching** — a :class:`_BatchFormer` sits between
+    the FIFO queue and the workers: up to ``max_batch`` SAME-bucket
+    requests (any interleaving — mixed buckets never cross-batch)
+    coalesce into one ``PlanExecutor.execute_batch`` dispatch stream,
+    amortizing per-dispatch overhead exactly like the paper's O5
+    in-batch ``nb`` axis, one tier up. Forming is deadline/priority
+    aware: a partial batch waits at most ``max_wait_ms`` for peers,
+    never past any member's deadline headroom, and a ``priority > 0``
+    (latency-critical) request dispatches immediately. Per-lane output
+    is bit-identical to the unbatched request. The autotuner searches
+    ``max_batch`` (``TunedConfig.max_batch``) so tuned buckets cap
+    batches at the measured per-hardware sweet spot.
   * **measured tuning** — ``warmup(..., tune=True)`` runs the
     per-hardware autotuner (``runtime.autotune``) for each bucket
     before traffic: persisted winners resolve with zero re-measurement,
@@ -65,9 +77,9 @@ same buckets, so existing call sites join the serving path unchanged.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
-import queue
 import threading
 import time
 from concurrent.futures import Future
@@ -187,6 +199,20 @@ class BucketStats:
     p50_ms: Optional[float] = None
     p99_ms: Optional[float] = None
     mean_ms: Optional[float] = None
+    # cross-request batching: ``dispatches`` counts executor calls
+    # (a formed batch of k requests is ONE dispatch), so
+    # ``mean_occupancy`` = completed requests / dispatches is the
+    # realized batch fill; ``batch_p50_ms`` streams the formed-batch
+    # wall times and ``amortized_us_per_request`` divides total
+    # execution wall over all completed requests — the number that
+    # must drop as occupancy rises. ``max_batch`` is this bucket's
+    # effective cap (the tuned ``TunedConfig.max_batch`` when the
+    # bucket is tuned, the service default otherwise).
+    dispatches: int = 0
+    mean_occupancy: Optional[float] = None
+    batch_p50_ms: Optional[float] = None
+    amortized_us_per_request: Optional[float] = None
+    max_batch: int = 1
     # fleet placement (all zero on a single-device service): device
     # count of the last fleet run, plus lifetime steal / failover-rerun
     # / retired-device totals from the bucket executor's fleet_totals
@@ -212,6 +238,11 @@ class ServiceStats:
     queued: int
     p50_ms: Optional[float] = None
     p99_ms: Optional[float] = None
+    # batching totals across buckets: executor dispatches and the
+    # realized completed-requests / dispatches fill (None pre-traffic)
+    max_batch: int = 1
+    dispatches: int = 0
+    mean_occupancy: Optional[float] = None
 
     @property
     def hit_rate(self) -> float:
@@ -221,6 +252,128 @@ class ServiceStats:
 
 def _ms(seconds: Optional[float]) -> Optional[float]:
     return None if seconds is None else round(seconds * 1e3, 3)
+
+
+@dataclasses.dataclass
+class _Request:
+    """One queued reconstruction plus its batching identity/constraints.
+
+    ``key`` is ``(geometry, plan.bucket_key)`` — the batchability
+    identity (``request_batch`` is deliberately not in ``bucket_key``,
+    so any k same-bucket requests share a key). ``deadline_s`` is the
+    ABSOLUTE ``time.perf_counter`` deadline (None = none); ``priority
+    > 0`` marks a latency-critical request that never waits to fill a
+    batch (and releases any batch it joins immediately)."""
+
+    fut: Future
+    projections: object
+    geom: CTGeometry
+    plan: ReconPlan
+    config: object
+    key: tuple
+    deadline_s: Optional[float] = None
+    priority: int = 0
+
+
+class _BatchFormer:
+    """The coalescing stage between ``submit``'s FIFO queue and the
+    worker threads.
+
+    ``take`` pops the FIFO head — the head's bucket DEFINES the batch;
+    requests of other buckets are never pulled in (their relative order
+    is preserved) — then gathers every queued same-bucket request up to
+    the head's cap (``cap_fn``). A still-partial batch may wait for
+    late peers, bounded by the TIGHTEST of: the service ``max_wait_s``,
+    and each member's deadline headroom minus the bucket's running
+    latency estimate (``est_fn`` — a deadline that cannot absorb the
+    wait dispatches the batch immediately). Members with ``priority >
+    0`` never wait: the batch ships as soon as one is aboard. With
+    ``cap == 1`` or ``max_wait_s == 0`` and no queued peers this
+    degenerates to exactly the old FIFO queue — one request per take,
+    admission order preserved.
+
+    ``put`` / ``close`` are atomic w.r.t. each other, so a request
+    either raises (closed) or is guaranteed a consumer: workers drain
+    the queue to empty before honoring the close. ``cap_fn``/``est_fn``
+    are called while holding the former's condition — they must never
+    take a lock that a ``put``/``close`` caller holds (the service
+    passes lock-free readers).
+    """
+
+    def __init__(self, *, max_wait_s: float, cap_fn, est_fn=None):
+        self._dq: "collections.deque[_Request]" = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._cap_fn = cap_fn
+        self._est_fn = est_fn if est_fn is not None else (lambda r: 0.0)
+        self.max_wait_s = float(max_wait_s)
+
+    def put(self, req: _Request) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("ReconService is closed")
+            self._dq.append(req)
+            self._cond.notify_all()
+
+    def qsize(self) -> int:
+        with self._cond:
+            return len(self._dq)
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def _gather(self, batch: List[_Request], cap: int) -> None:
+        """Pull queued same-bucket requests into ``batch`` (FIFO order,
+        call under the condition); other buckets keep their positions."""
+        key = batch[0].key
+        if len(batch) >= cap:
+            return
+        keep: "collections.deque[_Request]" = collections.deque()
+        while self._dq and len(batch) < cap:
+            r = self._dq.popleft()
+            if r.key == key:
+                batch.append(r)
+            else:
+                keep.append(r)
+        keep.extend(self._dq)
+        self._dq = keep
+
+    def _wait_limit(self, batch: List[_Request], t0: float) -> float:
+        """Absolute time until which this batch may keep waiting."""
+        limit = t0 + self.max_wait_s
+        est = self._est_fn(batch[0])
+        for r in batch:
+            if r.priority > 0:
+                return t0            # latency-critical: ship now
+            if r.deadline_s is not None:
+                # the wait must fit inside the member's deadline with
+                # the (estimated) reconstruction still to run
+                limit = min(limit, r.deadline_s - est)
+        return limit
+
+    def take(self) -> Optional[List[_Request]]:
+        """The next formed batch, or None when closed AND drained."""
+        with self._cond:
+            while not self._dq:
+                if self._closed:
+                    return None
+                self._cond.wait(0.05)
+            batch = [self._dq.popleft()]
+            cap = max(1, int(self._cap_fn(batch[0])))
+            self._gather(batch, cap)
+            if len(batch) >= cap or self.max_wait_s <= 0.0:
+                return batch
+            t0 = time.perf_counter()
+            while len(batch) < cap and not self._closed:
+                now = time.perf_counter()
+                limit = self._wait_limit(batch, t0)
+                if now >= limit:
+                    break
+                self._cond.wait(min(0.01, limit - now))
+                self._gather(batch, cap)
+            return batch
 
 
 class _Bucket:
@@ -238,6 +391,13 @@ class _Bucket:
         self.latency = LatencyHistogram()
         self.requests = 0
         self.hits = 0
+        # batching counters (mutated under the service lock): one
+        # "dispatch" per executor call, however many requests it served
+        self.cap = 1                   # effective max_batch
+        self.dispatches = 0
+        self.batched_requests = 0      # completed requests, all batches
+        self.exec_total_s = 0.0        # wall summed once per dispatch
+        self.batch_latency = LatencyHistogram()
 
     def snapshot(self) -> BucketStats:
         with self.executor._fleet_lock:
@@ -260,7 +420,15 @@ class _Bucket:
             completed=self.latency.count,
             p50_ms=_ms(self.latency.quantile(0.50)),
             p99_ms=_ms(self.latency.quantile(0.99)),
-            mean_ms=_ms(self.latency.mean()))
+            mean_ms=_ms(self.latency.mean()),
+            dispatches=self.dispatches,
+            mean_occupancy=(round(self.batched_requests / self.dispatches,
+                                  3) if self.dispatches else None),
+            batch_p50_ms=_ms(self.batch_latency.quantile(0.50)),
+            amortized_us_per_request=(
+                round(self.exec_total_s / self.batched_requests * 1e6, 1)
+                if self.batched_requests else None),
+            max_batch=self.cap)
 
 
 # --------------------------------------------------------------------------
@@ -302,22 +470,48 @@ class ReconService:
     fleet_max_retries : per-STEP failover budget of fleet buckets
         (``FleetConfig.max_retries_per_step``); ignored without
         ``devices``.
+    max_batch : cross-request batching cap — how many SAME-bucket
+        queued requests one executor dispatch may serve
+        (``PlanExecutor.execute_batch``). 1 (the default) disables
+        batching and preserves the exact pre-batching FIFO behavior.
+        Tuned buckets whose measured ``TunedConfig.max_batch`` is
+        smaller cap there instead (the operator's value stays the hard
+        upper bound). Per-lane output is bit-identical to an unbatched
+        request; only latency shaping changes.
+    max_wait_ms : how long a PARTIAL batch may hold the queue head
+        waiting for same-bucket peers. 0 (the default) never waits —
+        batching then only coalesces requests that are ALREADY queued
+        together (a burst). Deadline-aware: the wait never exceeds any
+        member's ``deadline_ms`` headroom (minus the bucket's running
+        latency estimate), and ``priority > 0`` members ship at once.
     """
 
     def __init__(self, *, max_inflight: int = 2, pipeline: str = "async",
                  cache: Optional[ProgramCache] = None, tuning=None,
-                 devices=None, fleet_max_retries: int = 2):
+                 devices=None, fleet_max_retries: int = 2,
+                 max_batch: int = 1, max_wait_ms: float = 0.0):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
         self.cache = cache if cache is not None else default_program_cache()
         self.pipeline = pipeline
         self.tuning = tuning
         self.fleet: Optional[FleetConfig] = as_fleet_config(
             devices, max_retries_per_step=fleet_max_retries)
         self.max_inflight = int(max_inflight)
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
         self._buckets: Dict[tuple, _Bucket] = {}
         self._lock = threading.Lock()          # buckets + counters
-        self._queue: "queue.Queue" = queue.Queue()
+        # cap_fn/est_fn run under the former's condition: lock-free
+        # bucket reads only (append-only dict + GIL), never the
+        # service lock — put()/close() callers may hold it
+        self._former = _BatchFormer(
+            max_wait_s=self.max_wait_ms / 1e3,
+            cap_fn=self._cap_for, est_fn=self._run_estimate)
         self._closed = False
         self._workers = [
             threading.Thread(target=self._worker, name=f"recon-serve-{i}",
@@ -325,6 +519,34 @@ class ReconService:
             for i in range(self.max_inflight)]
         for t in self._workers:
             t.start()
+
+    # ---- batching policy -------------------------------------------------
+
+    def _effective_cap(self, config) -> int:
+        """Batch cap for a bucket with tuned provenance ``config``: the
+        service ``max_batch`` bounded by a MEASURED winner's
+        ``max_batch`` (the tuner searched rb amortized — a measured 1
+        means batching lost on this hardware and disables it here;
+        heuristic configs carry no measurement and keep the default)."""
+        cap = self.max_batch
+        if cap > 1 and config is not None \
+                and getattr(config, "source", "heuristic") != "heuristic":
+            cap = min(cap, max(1, int(getattr(config, "max_batch", 1))))
+        return cap
+
+    def _cap_for(self, req: _Request) -> int:
+        bucket = self._buckets.get(req.key)   # lock-free: see __init__
+        if bucket is not None:
+            return bucket.cap
+        return self._effective_cap(req.config)
+
+    def _run_estimate(self, req: _Request) -> float:
+        """Expected reconstruction seconds for deadline headroom math
+        (0.0 until the bucket has completed traffic)."""
+        bucket = self._buckets.get(req.key)   # lock-free: see __init__
+        if bucket is None:
+            return 0.0
+        return bucket.latency.mean() or 0.0
 
     # ---- bucketing -------------------------------------------------------
 
@@ -410,9 +632,13 @@ class ReconService:
                         pipeline_depth=config.pipeline_depth,
                         tuned=config, fleet=self.fleet)
                     ex.warm()
+                    cap = self._effective_cap(config)
+                    if cap > 1 and ex.supports_request_batching:
+                        ex.warm_batch(cap)
                     bucket.executor = ex
                     bucket.config = config
                     bucket.source = self._source_of(config)
+                    bucket.cap = cap
                 return bucket
             misses_before = self.cache.stats()["misses"]
             tuned = config is not None and config.source != "heuristic"
@@ -422,9 +648,14 @@ class ReconService:
                 pipeline_depth=(config.pipeline_depth if tuned else 2),
                 tuned=config if tuned else None, fleet=self.fleet)
             ex.warm()
+            cap = self._effective_cap(config)
+            if cap > 1 and ex.supports_request_batching:
+                # the first FORMED batch must compile nothing either
+                ex.warm_batch(cap)
             built = self.cache.stats()["misses"] - misses_before
             bucket = _Bucket(geom, plan, ex, programs_built=built,
                              config=config, source=self._source_of(config))
+            bucket.cap = cap
             self._buckets[key] = bucket
             return bucket
 
@@ -468,20 +699,34 @@ class ReconService:
 
     # ---- request path ----------------------------------------------------
 
-    def submit(self, projections: jnp.ndarray, geom: CTGeometry,
+    def submit(self, projections: jnp.ndarray, geom: CTGeometry, *,
+               deadline_ms: Optional[float] = None, priority: int = 0,
                **options) -> "Future":
         """Enqueue one reconstruction; returns a ``Future`` whose
         ``result()`` is the volume (same contract as the façade the
-        options mirror — ``fdk_reconstruct``). FIFO across callers."""
+        options mirror — ``fdk_reconstruct``). FIFO across callers.
+
+        ``deadline_ms`` (relative to now) and ``priority`` shape BATCH
+        FORMING only — they never reorder the FIFO queue: a deadline
+        caps how long a partial batch this request joins may wait for
+        peers, and ``priority > 0`` marks it latency-critical (any
+        batch it joins dispatches immediately). Both are no-ops when
+        batching is off (``max_batch == 1``)."""
         plan, config = self._plan(geom, options)   # validate in the caller
+        if deadline_ms is not None and deadline_ms < 0:
+            raise ValueError(
+                f"deadline_ms must be >= 0, got {deadline_ms}")
         fut: Future = Future()
-        # the closed check and the enqueue are atomic under the lock so
-        # a request can never land behind close()'s worker sentinels
-        # (its future would hang with no consumer left)
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("ReconService is closed")
-            self._queue.put((fut, projections, geom, plan, config))
+        req = _Request(
+            fut=fut, projections=projections, geom=geom, plan=plan,
+            config=config, key=(geom, plan.bucket_key),
+            deadline_s=(None if deadline_ms is None
+                        else time.perf_counter() + deadline_ms / 1e3),
+            priority=int(priority))
+        # put() checks closed under the former's condition, so a
+        # request either raises here or is guaranteed a consumer
+        # (workers drain the queue to empty before honoring close)
+        self._former.put(req)
         return fut
 
     def reconstruct(self, projections: jnp.ndarray, geom: CTGeometry,
@@ -491,27 +736,51 @@ class ReconService:
 
     def _worker(self) -> None:
         while True:
-            item = self._queue.get()
+            batch = self._former.take()
+            if batch is None:
+                return
+            live = [r for r in batch
+                    if r.fut.set_running_or_notify_cancel()]
+            if not live:
+                continue
             try:
-                if item is None:
-                    return
-                fut, projections, geom, plan, config = item
-                if not fut.set_running_or_notify_cancel():
-                    continue
-                try:
-                    bucket = self._bucket(geom, plan, config=config)
-                    with self._lock:
-                        bucket.requests += 1
-                    t0 = time.perf_counter()
-                    result = bucket.executor.reconstruct(projections)
-                    # streamed latency: recorded as each request
-                    # completes, not sampled at stats() time
-                    bucket.latency.record(time.perf_counter() - t0)
-                    fut.set_result(result)
-                except BaseException as exc:
-                    fut.set_exception(exc)
-            finally:
-                self._queue.task_done()
+                head = live[0]
+                bucket = self._bucket(head.geom, head.plan,
+                                      config=head.config)
+                k = len(live)
+                with self._lock:
+                    bucket.requests += k
+                t0 = time.perf_counter()
+                if k == 1:
+                    results = [bucket.executor.reconstruct(
+                        head.projections)]
+                elif bucket.executor.supports_request_batching:
+                    # ONE dispatch stream serves all k lanes —
+                    # bit-identical per lane to the k==1 path
+                    results = bucket.executor.execute_batch(
+                        [r.projections for r in live])
+                else:
+                    # chunk-major buckets can't batch: the formed
+                    # group still runs back-to-back on one worker
+                    results = [bucket.executor.reconstruct(r.projections)
+                               for r in live]
+                wall = time.perf_counter() - t0
+                # streamed accounting: every member's service time IS
+                # the batch wall (they complete together); the batch
+                # itself lands once in the occupancy/amortized counters
+                for _ in live:
+                    bucket.latency.record(wall)
+                bucket.batch_latency.record(wall)
+                with self._lock:
+                    bucket.dispatches += 1
+                    bucket.batched_requests += k
+                    bucket.exec_total_s += wall
+                for r, vol in zip(live, results):
+                    r.fut.set_result(vol)
+            except BaseException as exc:
+                for r in live:
+                    if not r.fut.done():
+                        r.fut.set_exception(exc)
 
     # ---- lifecycle / introspection ---------------------------------------
 
@@ -520,6 +789,8 @@ class ReconService:
             live = list(self._buckets.values())
             buckets = tuple(b.snapshot() for b in live)
         overall = LatencyHistogram.merged(b.latency for b in live)
+        dispatches = sum(b.dispatches for b in buckets)
+        completed = sum(b.completed for b in buckets)
         return ServiceStats(
             requests=sum(b.requests for b in buckets),
             bucket_hits=sum(b.hits for b in buckets),
@@ -527,18 +798,25 @@ class ReconService:
             buckets=buckets,
             cache=self.cache.stats(),
             max_inflight=self.max_inflight,
-            queued=self._queue.qsize(),
+            queued=self._former.qsize(),
             p50_ms=_ms(overall.quantile(0.50)),
-            p99_ms=_ms(overall.quantile(0.99)))
+            p99_ms=_ms(overall.quantile(0.99)),
+            max_batch=self.max_batch,
+            dispatches=dispatches,
+            mean_occupancy=(round(completed / dispatches, 3)
+                            if dispatches else None))
 
     def close(self, wait: bool = True) -> None:
-        """Stop accepting requests; drain workers (idempotent)."""
+        """Stop accepting requests; drain workers (idempotent).
+        Already-queued requests complete — workers exit only once the
+        queue is empty."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
-            for _ in self._workers:
-                self._queue.put(None)
+        # outside the service lock: the former's condition is also
+        # taken by forming workers that read buckets (lock ordering)
+        self._former.close()
         if wait:
             for t in self._workers:
                 t.join()

@@ -1,0 +1,388 @@
+"""Cross-request batching (PR 7): execute_batch + the BatchFormer.
+
+Covers the batching seams the ISSUE pins down:
+  * bit-parity — ``PlanExecutor.execute_batch`` output is BIT-identical
+    to k sequential ``reconstruct`` calls for >= 4 variants including a
+    Pallas kernel and the non-jittable stacked fallback (vmap adds a
+    lane axis, it never reassociates a lane's reductions), on the
+    async host path, the device path, and the (single-device) fleet;
+  * the planner's ``request_batch`` axis — excluded from ``bucket_key``
+    by design (k same-bucket requests must land in ONE bucket), but
+    scaling the working-set model and the tile auto-picker's budget;
+  * BatchFormer semantics — FIFO degeneration at cap 1, same-bucket
+    gathering that never reorders other buckets, tail batches when k is
+    not a multiple of ``max_batch``, deadline-bypass (a request whose
+    deadline can't absorb the wait ships immediately), priority > 0
+    never waiting, and mixed-bucket bursts never cross-batching;
+  * service integration — occupancy/amortized stats, the sequential
+    fallback for chunk-major buckets, and the tuned ``max_batch`` cap;
+  * ``TunedConfig.max_batch`` — JSON round-trip incl. pre-batching
+    cache documents, and the tuner's batch axis gating.
+"""
+
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import standard_geometry
+from repro.runtime.executor import FleetConfig, PlanExecutor, ProgramCache
+from repro.runtime.planner import plan_reconstruction
+from repro.runtime.service import ReconService, _BatchFormer, _Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    geom = standard_geometry(n=16, n_det=24, n_proj=6)
+    rng = np.random.RandomState(7)
+    reqs = [jnp.asarray(rng.rand(geom.n_proj, geom.nh,
+                                 geom.nw).astype(np.float32))
+            for _ in range(3)]
+    return geom, reqs
+
+
+def _assert_bit_identical(seq, bat):
+    assert len(seq) == len(bat)
+    for a, b in zip(seq, bat):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape
+        assert (a == b).all()
+
+
+# ---- executor: batched vs sequential bit-parity ---------------------------
+
+@pytest.mark.parametrize("variant,kw", [
+    ("algorithm1_mp", {}),                              # untiled pure-JAX
+    ("subline_batch_mp", dict(tile_shape=(8, 8, 16))),  # tiled
+    ("share_mp", dict(tile_shape=(8, 8, 8))),       # mirror-paired slabs
+    ("subline_pl", {}),                             # Pallas (interpret)
+    ("banded_pl", {}),                    # non-jittable stacked fallback
+])
+def test_execute_batch_bit_identical(setup, variant, kw):
+    geom, reqs = setup
+    plan = plan_reconstruction(geom, variant, nb=2, proj_batch=4, **kw)
+    ex = PlanExecutor(geom, plan, cache=ProgramCache(), pipeline="async")
+    seq = [ex.reconstruct(p) for p in reqs]
+    bat = ex.execute_batch(reqs)
+    _assert_bit_identical(seq, bat)
+
+
+def test_execute_batch_device_out(setup):
+    geom, reqs = setup
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4,
+                               out="device")
+    ex = PlanExecutor(geom, plan, cache=ProgramCache())
+    seq = [ex.reconstruct(p) for p in reqs]
+    bat = ex.execute_batch(reqs)
+    _assert_bit_identical(seq, bat)
+
+
+def test_execute_batch_fleet(setup):
+    geom, reqs = setup
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4,
+                               tile_shape=(8, 8, 16))
+    ex = PlanExecutor(geom, plan, cache=ProgramCache(),
+                      fleet=FleetConfig())
+    seq = [ex.reconstruct(p) for p in reqs]
+    bat = ex.execute_batch(reqs)
+    _assert_bit_identical(seq, bat)
+    assert ex.last_fleet_report is not None
+
+
+def test_execute_batch_edges(setup):
+    geom, reqs = setup
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4)
+    ex = PlanExecutor(geom, plan, cache=ProgramCache())
+    assert ex.execute_batch([]) == []
+    one = ex.execute_batch(reqs[:1])                 # delegates
+    _assert_bit_identical([ex.reconstruct(reqs[0])], one)
+    with pytest.raises(ValueError, match="projections"):
+        ex.execute_batch([reqs[0], reqs[1][:3]])     # wrong view count
+    chunk = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4,
+                                schedule="chunk")
+    cex = PlanExecutor(geom, chunk, cache=ProgramCache())
+    assert not cex.supports_request_batching
+    with pytest.raises(ValueError, match="step"):
+        cex.execute_batch(reqs)
+    assert ex.supports_request_batching
+
+
+def test_warm_batch_precompiles(setup):
+    geom, _ = setup
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4)
+    cache = ProgramCache()
+    ex = PlanExecutor(geom, plan, cache=cache)
+    ex.warm()
+    before = cache.stats()["misses"]
+    ex.warm_batch(3)
+    assert cache.stats()["misses"] == before + 1     # the rb=3 program
+    ex.warm_batch(3)                                 # idempotent: a hit
+    assert cache.stats()["misses"] == before + 1
+
+
+# ---- planner: the rb axis -------------------------------------------------
+
+def test_request_batch_not_in_bucket_key(setup):
+    geom, _ = setup
+    a = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4)
+    b = plan_reconstruction(geom, "algorithm1_mp", nb=2, proj_batch=4,
+                            request_batch=4)
+    assert b.request_batch == 4
+    assert a.bucket_key == b.bucket_key      # rb is NOT bucket identity
+    assert b.working_set_bytes == 4 * a.working_set_bytes
+    assert a.batched(4) == b
+    assert b.batched(4) is b
+    with pytest.raises(ValueError, match="request_batch"):
+        a.batched(0)
+    with pytest.raises(ValueError, match="request_batch"):
+        plan_reconstruction(geom, "algorithm1_mp", request_batch=0)
+
+
+def test_request_batch_scales_tile_budget(setup):
+    geom, _ = setup
+    budget = 1 << 20
+    solo = plan_reconstruction(geom, "algorithm1_mp", nb=2,
+                               memory_budget=budget)
+    batched = plan_reconstruction(geom, "algorithm1_mp", nb=2,
+                                  memory_budget=budget, request_batch=8)
+    # rb working sets must fit TOGETHER: the auto-picked tile shrinks
+    # (or stays) and the rb-scaled working set honors the byte contract
+    assert np.prod(batched.tile_shape) <= np.prod(solo.tile_shape)
+    assert batched.working_set_bytes <= budget
+
+
+# ---- BatchFormer semantics ------------------------------------------------
+
+def _req(key, deadline_s=None, priority=0):
+    return _Request(fut=Future(), projections=None, geom=None, plan=None,
+                    config=None, key=key, deadline_s=deadline_s,
+                    priority=priority)
+
+
+def test_former_cap1_is_fifo():
+    f = _BatchFormer(max_wait_s=0.0, cap_fn=lambda r: 1)
+    for key in ("a", "b", "a"):
+        f.put(_req(key))
+    assert [f.take()[0].key for _ in range(3)] == ["a", "b", "a"]
+    f.close()
+    assert f.take() is None
+
+
+def test_former_gathers_same_bucket_only():
+    f = _BatchFormer(max_wait_s=0.0, cap_fn=lambda r: 4)
+    for key in ("a", "b", "a", "c", "a", "b"):
+        f.put(_req(key))
+    batch = f.take()
+    assert [r.key for r in batch] == ["a", "a", "a"]   # never cross-batch
+    # other buckets keep their relative FIFO order
+    assert [r.key for r in f.take()] == ["b", "b"]
+    assert [r.key for r in f.take()] == ["c"]
+
+
+def test_former_tail_batch_respects_cap():
+    f = _BatchFormer(max_wait_s=0.0, cap_fn=lambda r: 4)
+    for _ in range(6):
+        f.put(_req("a"))
+    assert len(f.take()) == 4
+    assert len(f.take()) == 2                # the tail, k % cap != 0
+
+
+def test_former_waits_for_late_peer():
+    f = _BatchFormer(max_wait_s=5.0, cap_fn=lambda r: 2)
+    out = []
+    t = threading.Thread(target=lambda: out.append(f.take()))
+    f.put(_req("a"))
+    t.start()
+    time.sleep(0.15)
+    f.put(_req("a"))                         # the late peer
+    t.join(timeout=3.0)
+    assert not t.is_alive()
+    assert len(out[0]) == 2                  # coalesced, not two takes
+
+
+def test_former_deadline_bypass():
+    f = _BatchFormer(max_wait_s=30.0, cap_fn=lambda r: 4,
+                     est_fn=lambda r: 0.0)
+    f.put(_req("a", deadline_s=time.perf_counter() + 0.05))
+    t0 = time.perf_counter()
+    batch = f.take()                         # must NOT wait 30 s
+    assert time.perf_counter() - t0 < 5.0
+    assert len(batch) == 1
+
+
+def test_former_priority_never_waits():
+    f = _BatchFormer(max_wait_s=30.0, cap_fn=lambda r: 4)
+    f.put(_req("a", priority=1))
+    t0 = time.perf_counter()
+    assert len(f.take()) == 1
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_former_est_consumes_deadline_headroom():
+    # headroom 10 s but the bucket's running estimate is 9.99 s: the
+    # wait budget is ~0 — the deadline cannot absorb waiting
+    f = _BatchFormer(max_wait_s=30.0, cap_fn=lambda r: 4,
+                     est_fn=lambda r: 9.99)
+    f.put(_req("a", deadline_s=time.perf_counter() + 10.0))
+    t0 = time.perf_counter()
+    assert len(f.take()) == 1
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_former_put_after_close_raises():
+    f = _BatchFormer(max_wait_s=0.0, cap_fn=lambda r: 1)
+    f.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        f.put(_req("a"))
+
+
+# ---- service integration --------------------------------------------------
+
+OPTS = dict(variant="algorithm1_mp", nb=2, proj_batch=4)
+
+
+def test_service_batched_burst_bit_identical(setup):
+    geom, reqs = setup
+    ref_svc = ReconService(max_inflight=1, cache=ProgramCache())
+    ref = [np.asarray(ref_svc.reconstruct(p, geom, **OPTS)) for p in reqs]
+    ref_svc.close()
+
+    svc = ReconService(max_inflight=1, max_batch=4, cache=ProgramCache())
+    svc.warmup([geom], **OPTS)
+    futs = [svc.submit(p, geom, **OPTS) for p in reqs + reqs]  # k=6
+    out = [np.asarray(f.result()) for f in futs]
+    _assert_bit_identical(ref + ref, out)
+    st = svc.stats()
+    b = st.buckets[0]
+    assert b.completed == 6
+    # tail batch: 6 = 4 + 2 under cap 4 (the single worker dispatches
+    # at most twice; the first take may catch fewer if the burst was
+    # still enqueueing, so bound rather than pin the count)
+    assert b.dispatches < 6
+    assert b.max_batch == 4
+    assert b.mean_occupancy > 1.0
+    assert b.amortized_us_per_request is not None
+    assert b.batch_p50_ms is not None
+    assert st.mean_occupancy == b.mean_occupancy
+    svc.close()
+
+
+def test_service_mixed_buckets_never_cross_batch(setup):
+    geom, reqs = setup
+    geom_b = standard_geometry(n=8, n_det=12, n_proj=6)
+    rng = np.random.RandomState(11)
+    reqs_b = [jnp.asarray(rng.rand(6, 12, 12).astype(np.float32))
+              for _ in range(3)]
+    ref_svc = ReconService(max_inflight=1, cache=ProgramCache())
+    ref_a = [np.asarray(ref_svc.reconstruct(p, geom, **OPTS))
+             for p in reqs]
+    ref_b = [np.asarray(ref_svc.reconstruct(p, geom_b, **OPTS))
+             for p in reqs_b]
+    ref_svc.close()
+
+    svc = ReconService(max_inflight=1, max_batch=4, cache=ProgramCache())
+    svc.warmup([geom, geom_b], **OPTS)
+    futs = []
+    for pa, pb in zip(reqs, reqs_b):         # interleaved A B A B A B
+        futs.append((svc.submit(pa, geom, **OPTS), "a"))
+        futs.append((svc.submit(pb, geom_b, **OPTS), "b"))
+    out_a = [np.asarray(f.result()) for f, tag in futs if tag == "a"]
+    out_b = [np.asarray(f.result()) for f, tag in futs if tag == "b"]
+    # volumes of different shapes through one interleaved burst: every
+    # result is bit-identical to its own bucket's unbatched run, so no
+    # batch ever mixed buckets (shape or content would differ)
+    _assert_bit_identical(ref_a, out_a)
+    _assert_bit_identical(ref_b, out_b)
+    st = svc.stats()
+    assert len(st.buckets) == 2
+    assert all(b.completed == 3 for b in st.buckets)
+    svc.close()
+
+
+def test_service_deadline_and_priority_bypass(setup):
+    geom, reqs = setup
+    # max_wait is 60 s: only the bypass paths let these finish fast
+    svc = ReconService(max_inflight=1, max_batch=4, max_wait_ms=60_000.0,
+                       cache=ProgramCache())
+    svc.warmup([geom], **OPTS)
+    t0 = time.perf_counter()
+    svc.submit(reqs[0], geom, deadline_ms=50.0, **OPTS).result(timeout=30)
+    svc.submit(reqs[1], geom, priority=1, **OPTS).result(timeout=30)
+    assert time.perf_counter() - t0 < 30.0
+    with pytest.raises(ValueError, match="deadline_ms"):
+        svc.submit(reqs[0], geom, deadline_ms=-1.0, **OPTS)
+    svc.close()
+
+
+def test_service_chunk_major_falls_back_sequential(setup):
+    geom, reqs = setup
+    opts = dict(OPTS, schedule="chunk")
+    ref_svc = ReconService(max_inflight=1, cache=ProgramCache())
+    ref = [np.asarray(ref_svc.reconstruct(p, geom, **opts)) for p in reqs]
+    ref_svc.close()
+    svc = ReconService(max_inflight=1, max_batch=4, cache=ProgramCache())
+    svc.warmup([geom], **opts)
+    assert not next(iter(svc._buckets.values())) \
+        .executor.supports_request_batching
+    futs = [svc.submit(p, geom, **opts) for p in reqs]
+    out = [np.asarray(f.result()) for f in futs]
+    _assert_bit_identical(ref, out)          # formed, then run one-by-one
+    svc.close()
+
+
+def test_service_validates_batch_knobs():
+    with pytest.raises(ValueError, match="max_batch"):
+        ReconService(max_batch=0)
+    with pytest.raises(ValueError, match="max_wait_ms"):
+        ReconService(max_wait_ms=-1.0)
+
+
+def test_tuned_max_batch_caps_bucket(setup):
+    from repro.runtime.autotune import TunedConfig
+    svc = ReconService(max_inflight=1, max_batch=8, cache=ProgramCache())
+    measured = TunedConfig(
+        variant="algorithm1_mp", schedule="step", pipeline="async",
+        pipeline_depth=2, tile_shape=(16, 16, 16), proj_batch=4, nb=2,
+        out="host", interpret=True, max_batch=2, source="measured")
+    heur = dataclasses_replace(measured, source="heuristic", max_batch=1)
+    assert svc._effective_cap(measured) == 2     # measured winner caps
+    assert svc._effective_cap(heur) == 8         # heuristic: default cap
+    assert svc._effective_cap(None) == 8
+    svc.close()
+    one = ReconService(max_inflight=1, max_batch=1, cache=ProgramCache())
+    assert one._effective_cap(measured) == 1     # batching disabled
+    one.close()
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+# ---- TunedConfig.max_batch round-trip -------------------------------------
+
+def test_tuned_config_max_batch_roundtrip(setup):
+    from repro.runtime.autotune import TunedConfig, _batch_axis
+    geom, _ = setup
+    cfg = TunedConfig(
+        variant="algorithm1_mp", schedule="step", pipeline="async",
+        pipeline_depth=2, tile_shape=(16, 16, 16), proj_batch=4, nb=2,
+        out="host", interpret=True, max_batch=4)
+    back = TunedConfig.from_json(cfg.to_json())
+    assert back == cfg and back.max_batch == 4
+    assert cfg.key != dataclasses_replace(cfg, max_batch=1).key
+    # pre-batching cache documents (no max_batch field) default to 1
+    doc = cfg.to_json()
+    del doc["max_batch"]
+    assert TunedConfig.from_json(doc).max_batch == 1
+    # the tuner's batch axis: step-major only, candidates exclude cur
+    cands = _batch_axis(cfg)
+    assert sorted(c.max_batch for c in cands) == [1, 2, 8]
+    assert _batch_axis(dataclasses_replace(cfg, schedule="chunk")) == []
+    # the config re-plans with its rb baked into the working-set model
+    plan = cfg.build_plan(geom)
+    assert plan.request_batch == 4
