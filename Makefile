@@ -3,8 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
-	bench-smoke bench-service bench-autotune bench-fleet test-fleet \
-	serve
+	bench-smoke bench-service bench-autotune bench-fleet bench-stream \
+	test-fleet serve
 
 tier1:
 	tests/run_tier1.sh
@@ -29,6 +29,9 @@ bench-autotune:                # measured per-hardware config search
 
 bench-fleet:                   # single vs fleet (subprocess: 8 devices)
 	$(PY) -m benchmarks.bench_fleet
+
+bench-stream:                  # online ingestion: tail + hidden fraction
+	$(PY) -m benchmarks.bench_stream
 
 test-fleet:                    # the multidevice CI lane, locally
 	$(PY) -m pytest -q tests/test_fleet.py tests/test_distributed.py \

@@ -25,8 +25,8 @@ from .geometry import CTGeometry, projection_matrices
 def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
                 tiling, memory_budget: Optional[int],
                 proj_batch: Optional[int], out: Optional[str],
-                schedule: Optional[str] = None, tuning=None,
-                **kernel_options):
+                schedule: Optional[str] = None, ingest: str = "offline",
+                tuning=None, **kernel_options):
     """Shared façade-to-planner translation (tiling= conventions)."""
     from repro.runtime.planner import plan_reconstruction
 
@@ -41,7 +41,7 @@ def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
     return plan_reconstruction(
         geom, variant, tile_shape=tile_shape, memory_budget=memory_budget,
         nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
-        schedule=schedule, tuning=tuning, **kernel_options)
+        schedule=schedule, ingest=ingest, tuning=tuning, **kernel_options)
 
 
 def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,

@@ -33,7 +33,13 @@ This module is the subsystem that *measures* instead of guesses:
     ``ReconPlan.bucket_key``. A second process on the same machine
     resolves the same winner with ZERO re-measurement; a different
     machine (fingerprint mismatch) re-tunes. Missing or corrupt cache
-    files degrade to the heuristics — never to an error.
+    files degrade to the heuristics — never to an error. Entries are
+    SELF-MAINTAINING: an :func:`autotune` resolve of an entry older
+    than ``revalidate_s`` re-measures the heuristic baseline once
+    (cheap) and invalidates + re-tunes when it drifted beyond
+    :data:`DRIFT_RATIO` from the recorded baseline — a stale winner
+    from a changed machine heals itself instead of pinning a bad
+    configuration forever.
   * :func:`resolve_config` / :func:`resolve_plan` — the LOOKUP-ONLY
     path consulted by ``plan_reconstruction(variant="auto")``, the
     ``fdk_reconstruct`` façade, and ``ReconService``: cache hit returns
@@ -87,6 +93,13 @@ _DEFAULT_VARIANT = "algorithm1_mp"
 _LADDER = ("algorithm1_mp", "symmetry_mp", "subline_batch_mp",
            "subline_mp", "share_mp", "transpose_mp",
            "subline_pl", "onehot_pl", "banded_pl")
+
+# cache self-maintenance: a resolved entry older than ``revalidate_s``
+# gets ONE cheap heuristic-baseline probe; a probe/recorded-baseline
+# ratio beyond DRIFT_RATIO (either direction) invalidates the entry and
+# re-runs the search — the machine the entry was measured on is no
+# longer the machine we are running on, performance-wise.
+DRIFT_RATIO = 2.0
 
 
 # --------------------------------------------------------------------------
@@ -179,6 +192,13 @@ class TunedConfig:
     baseline_us: float = 0.0
     source: str = "heuristic"           # "measured" | "cache" | "heuristic"
     trials: int = 0
+    # wall-clock stamp (time.time()) of the measurement that produced
+    # or last REVALIDATED this entry. Entries older than the caller's
+    # ``revalidate_s`` get a cheap baseline probe on resolve: within
+    # DRIFT_RATIO of the recorded baseline the stamp refreshes, beyond
+    # it the entry is invalidated and re-tuned (self-maintenance).
+    # Pre-existing cache files lack the field -> 0.0 == always stale.
+    tuned_at: float = 0.0
 
     @property
     def key(self) -> Tuple:
@@ -337,25 +357,44 @@ class TuningCache:
         except (KeyError, TypeError, ValueError):
             return None     # malformed entry == miss
 
+    def _write(self, doc: Dict) -> None:
+        """Atomic write + memo refresh (call holding ``self._lock``)."""
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, self.path)
+        try:
+            st = os.stat(self.path)
+            with _DOC_CACHE_GUARD:
+                _DOC_CACHE[os.path.abspath(self.path)] = \
+                    ((st.st_mtime_ns, st.st_size), doc)
+        except OSError:
+            pass
+
     def store(self, fp_key: str, req_key: str, config: TunedConfig) -> None:
         with self._lock:
             doc = self._load(memo=False)   # private copy — mutated below
             doc["fingerprints"].setdefault(fp_key, {})[req_key] = \
                 config.to_json()
-            d = os.path.dirname(os.path.abspath(self.path))
-            os.makedirs(d, exist_ok=True)
-            tmp = self.path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(doc, f, indent=2)
-                f.write("\n")
-            os.replace(tmp, self.path)
-            try:
-                st = os.stat(self.path)
-                with _DOC_CACHE_GUARD:
-                    _DOC_CACHE[os.path.abspath(self.path)] = \
-                        ((st.st_mtime_ns, st.st_size), doc)
-            except OSError:
-                pass
+            self._write(doc)
+
+    def invalidate(self, fp_key: str, req_key: str) -> bool:
+        """Drop one persisted winner (the self-maintenance path: a stale
+        entry whose recorded baseline no longer matches this hardware).
+        Returns whether an entry was removed."""
+        with self._lock:
+            doc = self._load(memo=False)
+            bucket = doc["fingerprints"].get(fp_key)
+            if not bucket or req_key not in bucket:
+                return False
+            del bucket[req_key]
+            if not bucket:
+                del doc["fingerprints"][fp_key]
+            self._write(doc)
+            return True
 
     def entries(self) -> Dict[str, Dict[str, Dict]]:
         """Raw {fingerprint: {request_key: config doc}} view —
@@ -679,7 +718,8 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
              exact: Optional[bool] = None,
              variants: Optional[Sequence[str]] = None,
              cache=None, force: bool = False, projections=None,
-             program_cache=None, **kernel_options) -> TunedConfig:
+             program_cache=None, revalidate_s: float = 3600.0,
+             **kernel_options) -> TunedConfig:
     """Measured configuration search for one request shape.
 
     Returns the winning :class:`TunedConfig` and persists it in the
@@ -703,6 +743,17 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
     random projections of the geometry's shape); ``program_cache``
     shares compiled programs with the caller (e.g. the serving layer's
     cache, so tuning doubles as warmup).
+
+    The cache is SELF-MAINTAINING: a hit younger than ``revalidate_s``
+    wall seconds resolves with zero measurement (the fast path above);
+    an older hit pays ONE cheap heuristic-baseline probe. If the probe
+    lands within :data:`DRIFT_RATIO` of the entry's recorded baseline
+    the entry is restamped as fresh and returned (``source ==
+    "cache"``, ``trials == 0`` still); beyond it — the machine's
+    performance character changed (new hardware step, contended host,
+    migrated cache file) — the entry is invalidated and the full search
+    re-runs. Entries written before this field existed carry
+    ``tuned_at == 0`` and always revalidate on first resolve.
     """
     import numpy as np
     import jax.numpy as jnp
@@ -718,7 +769,38 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
     if not force:
         hit = tcache.lookup(fp, rkey)
         if hit is not None:
-            return dataclasses.replace(hit, source="cache", trials=0)
+            age = time.time() - float(hit.tuned_at)
+            if age <= float(revalidate_s) or hit.baseline_us <= 0.0:
+                # fresh (or unvalidatable: no recorded baseline to
+                # compare against) — the zero-measurement fast path
+                return dataclasses.replace(hit, source="cache", trials=0)
+            # stale: one cheap baseline probe decides keep vs re-tune
+            if projections is None:
+                rng = np.random.RandomState(0)
+                projections = jnp.asarray(rng.rand(
+                    geom.n_proj, geom.nh, geom.nw).astype(np.float32))
+            if program_cache is None:
+                program_cache = ProgramCache()
+            try:
+                probe_us = _measure_config(
+                    geom, base_cfg, projections, program_cache,
+                    iters=1, warmup=1) * 1e6
+            except Exception:
+                probe_us = None     # unmeasurable probe: let the full
+                                    # search below re-establish reality
+            if probe_us is not None and probe_us > 0.0:
+                drift = max(probe_us / hit.baseline_us,
+                            hit.baseline_us / probe_us)
+                if drift <= DRIFT_RATIO:
+                    # still believable — refresh the stamp only (the
+                    # recorded baseline is kept: restamping it too
+                    # would let slow drift creep under the threshold)
+                    tcache.store(fp, rkey, dataclasses.replace(
+                        hit, tuned_at=time.time()))
+                    return dataclasses.replace(hit, source="cache",
+                                               trials=0)
+            tcache.invalidate(fp, rkey)
+            # fall through to the full search (which re-stores)
 
     if exact is None:
         exact = variant not in (None, "auto")
@@ -771,6 +853,6 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
         pipeline_depth=best.pipeline_depth)
     winner = dataclasses.replace(
         best, wall_us=best_t * 1e6, baseline_us=baseline_t * 1e6,
-        source="measured", trials=len(measured))
+        source="measured", trials=len(measured), tuned_at=time.time())
     tcache.store(fp, rkey, winner)
     return winner

@@ -41,6 +41,14 @@ this module turns it into arrays:
     :meth:`PlanExecutor.from_config` consumes a
     ``runtime.autotune.TunedConfig`` (the measured per-hardware choice
     of schedule/pipeline/variant/tile/chunk knobs).
+
+  * :class:`StreamingExecutor` — ONLINE execution
+    (``PlanExecutor.open_stream`` on an ``ingest="stream"`` plan):
+    projections are pushed as the scanner produces them and each view
+    chunk is filtered + folded into the per-step device accumulators
+    the moment it completes, so reconstruction wall hides behind
+    acquisition; the chunk-index fold order makes ``close()``
+    bit-identical to the offline chunk-major ``reconstruct``.
 """
 
 from __future__ import annotations
@@ -123,6 +131,39 @@ class ProgramCache:
             # non-jittable kernels (KernelSpec.jittable=False) inspect
             # concrete values at trace time; cache them un-wrapped
             return jax.jit(prog) if spec.jittable else prog
+
+        return self.get_or_build(key, build)
+
+    def batch_program(self, variant: str, call_shape: Tuple[int, int, int],
+                      nb: int, dtype: str, interpret: bool,
+                      options: Tuple = (), *, rb: int) -> Callable:
+        """rb-lane chunk-kernel program: ``prog(img_b, mats) ->
+        vol_b((rb,) + call_shape)`` where ``img_b`` stacks rb filtered
+        projection chunks ``(rb, chunk, nw, nh)`` over ONE shared
+        matrix chunk.
+
+        The streaming service uses this to fold the SAME view chunk of
+        rb concurrent scan sessions (same bucket ⇒ same geometry, same
+        chunk grid, same rotation phase) with one dispatch. The leading
+        ``vmap`` axis never reassociates a lane's reduction, so every
+        session stays bit-identical to its solo fold — the same
+        argument as :meth:`batch_scan_program`, one chunk at a time.
+        Non-jittable kernels fall back to a stacked per-lane loop.
+        """
+        key = ("batch_kernel", variant, tuple(call_shape), int(nb),
+               str(dtype), bool(interpret), tuple(options), int(rb))
+
+        def build():
+            spec = get_spec(variant)
+            opts = spec.resolve_options(
+                {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
+            shape = tuple(call_shape)
+            fn = spec.fn
+            one = lambda img, mat: fn(img, mat, shape, **opts)  # noqa: E731
+            if spec.jittable:
+                return jax.jit(jax.vmap(one, in_axes=(0, None)))
+            return lambda img_b, mat: jnp.stack(
+                [one(img_b[r], mat) for r in range(int(rb))])
 
         return self.get_or_build(key, build)
 
@@ -1227,6 +1268,22 @@ class PlanExecutor:
             return np.transpose(vol, (2, 1, 0))
         return bp.volume_to_native(vol)
 
+    def open_stream(self, *, max_pending_chunks: int = 2,
+                    on_ready: Optional[Callable[[int], None]] = None
+                    ) -> "StreamingExecutor":
+        """Open an online (push-driven) reconstruction on this executor.
+
+        Projections are PUSHED as the scanner produces them
+        (``push(views)``); each view chunk is back-projected the moment
+        it completes, so reconstruction wall hides behind acquisition,
+        and ``close()`` returns a volume bit-identical to
+        :meth:`reconstruct` on the assembled set (same chunk partition
+        ⇒ same reduction order). Requires a chunk-major plan — build it
+        with ``ingest="stream"``. See :class:`StreamingExecutor`.
+        """
+        return StreamingExecutor(self, max_pending_chunks=max_pending_chunks,
+                                 on_ready=on_ready)
+
     def execute_batch(self, projections_seq: Sequence[jnp.ndarray]):
         """Reconstruct k same-bucket requests with ONE dispatch stream.
 
@@ -1351,3 +1408,386 @@ class PlanExecutor:
             if flush is not None:
                 flush.close()
         return vol
+
+
+# --------------------------------------------------------------------------
+# Online (streaming) execution: fold view chunks as they arrive
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamReport:
+    """What one closed stream did, in overlap terms.
+
+    ``acquire_s`` is first-view to last-view arrival wall (the simulated
+    or real scanner rotation), ``compute_s`` the total fold + finish
+    busy wall, and ``tail_s`` the wall from LAST view arrival to the
+    finished volume — the end-to-end latency a streaming deployment
+    actually adds on top of acquisition. ``hidden_fraction`` is the
+    share of compute that ran during acquisition instead of after it.
+    """
+
+    n_views: int
+    n_chunks: int
+    acquire_s: float
+    compute_s: float
+    tail_s: float
+
+    @property
+    def hidden_fraction(self) -> float:
+        if self.compute_s <= 0.0:
+            return 1.0
+        return max(0.0, min(1.0, 1.0 - self.tail_s / self.compute_s))
+
+
+class StreamingExecutor:
+    """Online reconstruction: push projections as they arrive, fold each
+    view chunk the moment it completes.
+
+    The arrival-queue contract (docs/ARCHITECTURE.md Stage 8):
+
+      * ``push(views, start=None)`` accepts one or more raw views;
+        ``start`` defaults to sequential delivery, an explicit row index
+        allows ANY arrival order within a chunk (each view lands in its
+        chunk buffer by row, so within-chunk permutations cannot change
+        the result). Each view may arrive exactly once.
+      * Chunk ``c`` becomes *ready* when all of its raw rows are
+        present. Ready chunks are folded strictly in chunk-index order
+        — the order the offline chunk-major loop uses — which is the
+        whole exactness argument: per step, the device-side running sum
+        ``((p0 + p1) + p2)…`` over chunk parts is the same
+        left-associated f32 reduction the offline loop performs, so
+        ``close()`` is bit-identical to ``reconstruct`` on the
+        assembled set.
+      * At most ``max_pending_chunks`` ready-but-unfolded chunks may
+        exist; a faster-than-compute producer blocks in ``push`` until
+        the folder catches up (bounded buffering, real backpressure).
+        ``max_pending_seen`` records the high-water mark.
+      * ``close()`` requires every view; it then waits for the final
+        fold + host flush and returns the volume. ``report`` carries
+        the overlap metrics afterwards.
+
+    Two drive modes: by default an internal folder thread consumes ready
+    chunks (push-and-forget for callers); with ``on_ready=`` the
+    completion of each chunk is reported to the callback instead and an
+    EXTERNAL driver (the service's stream worker, which batches lanes
+    across sessions) runs ``fold``/``filtered``/``accept_part``/
+    ``chunk_done``. Folding overlaps acquisition three ways: device
+    compute of chunk c, filtering of ready chunk c+1 (dispatched early,
+    async under JAX), and the final per-step host flushes through
+    :class:`_AsyncFlushQueue` when the executor pipelines.
+    """
+
+    def __init__(self, ex: PlanExecutor, *, max_pending_chunks: int = 2,
+                 on_ready: Optional[Callable[[int], None]] = None):
+        plan = ex.plan
+        if plan.schedule != "chunk":
+            raise ValueError(
+                "streaming folds view chunks as they arrive (chunk-major "
+                "by construction); plan with ingest='stream' (or "
+                f"schedule='chunk'), got schedule={plan.schedule!r}")
+        if ex.fleet is not None:
+            raise ValueError(
+                "streaming does not compose with fleet execution yet — "
+                "open the stream on a single-device executor")
+        if max_pending_chunks < 1:
+            raise ValueError(
+                f"max_pending_chunks must be >= 1, got {max_pending_chunks}")
+        self._ex = ex
+        self.geom = ex.geom
+        self._plan = plan
+        self._chunk_bounds = plan.chunks
+        self._n_chunks = len(self._chunk_bounds)
+        self._n_views = plan.n_proj
+        self._chunk_size = plan.chunk_size
+        self._max_pending = int(max_pending_chunks)
+        self._on_ready = on_ready
+        self._mat_p = _pad_mats(projection_matrices(ex.geom),
+                                plan.n_proj_padded)
+
+        self._cond = threading.Condition()
+        self._buffers: Dict[int, np.ndarray] = {}
+        self._missing = {c: self._raw_rows(c) for c in range(self._n_chunks)}
+        self._seen = np.zeros(self._n_views, bool)
+        self._filtered_memo: Dict[int, tuple] = {}
+        self._complete: set = set()
+        self._accs: list = [None] * len(plan.steps)
+        self._next_fold = 0
+        self._next_row = 0
+        self._rows = 0
+        self._ingest_closed = False
+        self._error: Optional[BaseException] = None
+        self._result = None
+        self._finished = threading.Event()
+        self.max_pending_seen = 0
+
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._t_done: Optional[float] = None
+        self._busy = 0.0
+
+        if on_ready is None:
+            self._thread = threading.Thread(
+                target=self._drive, name="recon-stream-fold", daemon=True)
+            self._thread.start()
+
+    # ---- ingest side ------------------------------------------------------
+
+    def _raw_rows(self, c: int) -> int:
+        """Raw (un-padded) views chunk ``c`` must receive."""
+        s0, s1 = self._chunk_bounds[c]
+        return min(s1, self._n_views) - s0
+
+    def _raise_if_failed(self) -> None:
+        if self._error is not None:
+            raise self._error
+
+    def push(self, views, start: Optional[int] = None) -> None:
+        """Deliver view rows ``[start, start + k)`` (default: the next
+        sequential rows). Blocks only for backpressure — when
+        ``max_pending_chunks`` ready chunks are already waiting."""
+        views = np.asarray(views, np.float32)
+        if views.ndim == 2:
+            views = views[None]
+        if views.ndim != 3 or views.shape[1:] != (self.geom.nh,
+                                                  self.geom.nw):
+            raise ValueError(
+                f"push expects (k, nh, nw) or (nh, nw) views of detector "
+                f"shape ({self.geom.nh}, {self.geom.nw}), got "
+                f"{tuple(views.shape)}")
+        k = views.shape[0]
+        with self._cond:
+            self._raise_if_failed()
+            if self._ingest_closed:
+                raise RuntimeError("push() after close()")
+            first = self._next_row if start is None else int(start)
+            if first < 0 or first + k > self._n_views:
+                raise ValueError(
+                    f"views [{first}, {first + k}) outside the stream's "
+                    f"[0, {self._n_views}) scan")
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+            for off in range(k):
+                r = first + off
+                if self._seen[r]:
+                    raise ValueError(f"view {r} pushed twice")
+                c = r // self._chunk_size
+                s0, _ = self._chunk_bounds[c]
+                buf = self._buffers.get(c)
+                if buf is None:
+                    buf = np.zeros(
+                        (self._raw_rows(c), self.geom.nh, self.geom.nw),
+                        np.float32)
+                    self._buffers[c] = buf
+                buf[r - s0] = views[off]
+                self._seen[r] = True
+                self._rows += 1
+                self._missing[c] -= 1
+                if self._missing[c] == 0:
+                    self._admit_ready(c)
+            self._next_row = max(self._next_row, first + k)
+            self._t_last = time.perf_counter()
+            self._cond.notify_all()
+
+    def _admit_ready(self, c: int) -> None:
+        """Mark chunk ``c`` ready (under ``_cond``): backpressure first,
+        then hand it to the folder (thread or ``on_ready`` callback)."""
+        while (len(self._complete) >= self._max_pending
+               and self._error is None):
+            self._cond.wait(0.05)
+        self._raise_if_failed()
+        self._complete.add(c)
+        self.max_pending_seen = max(self.max_pending_seen,
+                                    len(self._complete))
+        self._cond.notify_all()
+        if self._on_ready is not None:
+            # deliver OUTSIDE the lock: the callback may enqueue into
+            # structures with their own locks (the service's former)
+            self._cond.release()
+            try:
+                self._on_ready(c)
+            finally:
+                self._cond.acquire()
+
+    def close(self):
+        """Finish the stream: requires every view delivered; waits for
+        the remaining folds + final flush, returns the volume."""
+        with self._cond:
+            if self._ingest_closed:
+                raise RuntimeError("stream already closed")
+            self._ingest_closed = True
+            if self._error is None and self._rows < self._n_views:
+                self._error = RuntimeError(
+                    f"stream closed after {self._rows} of "
+                    f"{self._n_views} views — every view must be pushed "
+                    f"before close()")
+                self._finished.set()
+            self._cond.notify_all()
+        self._finished.wait()
+        with self._cond:
+            self._raise_if_failed()
+            return self._result
+
+    def fail(self, exc: BaseException) -> None:
+        """Poison the stream (external drivers report fold errors here);
+        ``push``/``close`` re-raise it."""
+        with self._cond:
+            if self._error is None:
+                self._error = exc
+            self._finished.set()
+            self._cond.notify_all()
+
+    # ---- fold side (internal thread, or the service's stream worker) -----
+
+    @property
+    def next_fold(self) -> int:
+        """Index of the next chunk that must fold (order contract)."""
+        with self._cond:
+            return self._next_fold
+
+    def _filter_pair(self, buf: np.ndarray, c: int):
+        """Filter + transpose one ready chunk — the same float-op path
+        as the offline :meth:`PlanExecutor._chunk_inputs`."""
+        s0, s1 = self._chunk_bounds[c]
+        img_c = bp.transpose_projections(
+            fdk_filter_chunk(jnp.asarray(buf), self.geom,
+                             self._plan.n_proj))
+        pad = (s1 - s0) - img_c.shape[0]
+        if pad > 0:   # tail chunk: zero images pair with repeated matrices
+            img_c = jnp.concatenate(
+                [img_c, jnp.zeros((pad,) + img_c.shape[1:], img_c.dtype)],
+                axis=0)
+        return img_c, self._mat_p[s0:s1]
+
+    def filtered(self, c: int):
+        """Filtered ``(img_c, mat_c)`` of ready chunk ``c``."""
+        with self._cond:
+            pair = self._filtered_memo.pop(c, None)
+            if pair is not None:
+                return pair
+            if c not in self._complete:
+                raise RuntimeError(f"chunk {c} is not ready")
+            buf = self._buffers[c]
+        return self._filter_pair(buf, c)
+
+    def prefilter(self, c: int) -> None:
+        """Dispatch chunk ``c``'s filtering now if it is ready (lazy
+        under JAX's async dispatch — overlaps the current fold)."""
+        with self._cond:
+            if (c >= self._n_chunks or c in self._filtered_memo
+                    or c not in self._complete):
+                return
+            buf = self._buffers[c]
+        pair = self._filter_pair(buf, c)
+        with self._cond:
+            self._filtered_memo.setdefault(c, pair)
+
+    def accept_part(self, i: int, part) -> None:
+        """Fold one kernel output into step ``i``'s device accumulator
+        (donated add — the chunk-index running sum)."""
+        acc = self._accs[i]
+        self._accs[i] = part if acc is None else _acc_add(acc, part)
+
+    def add_busy(self, seconds: float) -> None:
+        with self._cond:
+            self._busy += max(0.0, seconds)
+
+    def fold(self, c: int) -> None:
+        """Fold ready chunk ``c`` into every step accumulator (single
+        lane; the service's batched path drives ``filtered`` /
+        ``accept_part`` / ``chunk_done`` itself)."""
+        t0 = time.perf_counter()
+        img_c, mat_c = self.filtered(c)
+        self.prefilter(c + 1)   # overlap next chunk's filtering
+        ex = self._ex
+        for i, step in enumerate(self._plan.steps):
+            prog = ex._program(step.variant, step.call_shape)
+            self.accept_part(i, prog(img_c, ex._translated(mat_c, step)))
+        self.chunk_done(c)
+        self.add_busy(time.perf_counter() - t0)
+
+    def chunk_done(self, c: int) -> None:
+        """Retire folded chunk ``c``; the LAST chunk triggers the final
+        per-step volume flush."""
+        with self._cond:
+            if c != self._next_fold:
+                raise RuntimeError(
+                    f"chunk {c} folded out of order (expected "
+                    f"{self._next_fold}) — the chunk-index fold order is "
+                    f"the exactness contract")
+            self._complete.discard(c)
+            self._buffers.pop(c, None)
+            self._next_fold = c + 1
+            finish = self._next_fold == self._n_chunks
+            self._cond.notify_all()
+        if finish:
+            self._finish()
+
+    def _finish(self) -> None:
+        """Place every step accumulator into the volume — the same
+        placement primitives (and float-op order) as the offline
+        chunk-major walk, ending in one host add per write into the
+        zeroed volume."""
+        ex = self._ex
+        plan = self._plan
+        if plan.out == "device":
+            if ex._single_full_call():
+                vol_t = self._accs[0]
+            else:
+                vol_t = jnp.zeros(plan.vol_shape_xyz, jnp.float32)
+                for step, acc in zip(plan.steps, self._accs):
+                    for (i_s, j_s, k_s), piece in ex._step_writes(step, acc):
+                        idx = jnp.asarray(
+                            [i_s.start, j_s.start, k_s.start], jnp.int32)
+                        vol_t = _place_device_add(vol_t, piece, idx)
+            result = bp.volume_to_native(vol_t)
+        else:
+            vol = np.zeros(plan.vol_shape_xyz, np.float32)
+            flush = ex._open_flush(vol)
+            try:
+                for step, acc in zip(plan.steps, self._accs):
+                    writes = ex._step_writes(step, acc)
+                    if flush is not None:
+                        flush.put(writes)
+                    else:
+                        for sl, piece in writes:
+                            vol[sl] += np.asarray(piece)
+            finally:
+                if flush is not None:
+                    flush.close()
+            result = np.transpose(vol, (2, 1, 0))
+        with self._cond:
+            self._accs = [None] * len(plan.steps)
+            self._result = result
+            self._t_done = time.perf_counter()
+            self._finished.set()
+            self._cond.notify_all()
+
+    def _drive(self) -> None:
+        """Internal folder thread: consume ready chunks in index order."""
+        try:
+            for c in range(self._n_chunks):
+                with self._cond:
+                    while c not in self._complete and self._error is None:
+                        self._cond.wait(0.1)
+                    if self._error is not None:
+                        return
+                self.fold(c)
+        except BaseException as exc:  # noqa: BLE001 — surfaced at close()
+            self.fail(exc)
+
+    # ---- introspection ----------------------------------------------------
+
+    @property
+    def report(self) -> Optional[StreamReport]:
+        """Overlap metrics once the stream finished, else None."""
+        with self._cond:
+            if self._t_done is None:
+                return None
+            t_first = self._t_first if self._t_first is not None else 0.0
+            t_last = (self._t_last if self._t_last is not None
+                      else self._t_done)
+            return StreamReport(
+                n_views=self._n_views, n_chunks=self._n_chunks,
+                acquire_s=max(0.0, t_last - t_first),
+                compute_s=self._busy,
+                tail_s=max(0.0, self._t_done - t_last))

@@ -122,6 +122,38 @@ class StepWork:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChunkFold:
+    """One online-arrival unit of work: a completed projection chunk
+    plus every tile step it must be folded into. The executor runs the
+    steps in schedule order, adding each kernel output into that step's
+    device-resident accumulator — the arrival-ordered dual of
+    :class:`StepWork`."""
+
+    chunk: ChunkWork
+    steps: Tuple[PlanStep, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSchedule:
+    """Arrival-ordered (chunk-major) view of a plan for online ingest.
+
+    ``folds[c]`` becomes runnable the moment every raw view of chunk
+    ``c`` has arrived; folds MUST be consumed in index order (the
+    chunk-index fold order is what makes the online reduction
+    bit-identical to the offline chunk-major loop — see
+    docs/ARCHITECTURE.md Stage 8). ``n_views`` is the raw view count a
+    stream must deliver before it can close; rows past it inside the
+    tail chunk are the usual zero-image nb padding and are never
+    pushed.
+    """
+
+    n_chunks: int
+    chunk_size: int
+    n_views: int
+    folds: Tuple[ChunkFold, ...]
+
+
+@dataclasses.dataclass(frozen=True)
 class StepMajorSchedule:
     """Step-major view of a plan: per-step chunk work lists + the scan
     grid shape.
@@ -263,6 +295,14 @@ class ReconPlan:
     # of them happened to coalesce. It DOES scale the working-set model
     # (every projection stack and accumulator is rb-deep).
     request_batch: int = 1
+    # ingest: "offline" (all projections available up front — every
+    # pre-PR-8 path) | "stream" (projections arrive while the plan
+    # runs; the executor folds each view chunk the moment it
+    # completes). Stream plans are always chunk-major — the arriving
+    # unit IS the chunk — and ARE part of bucket_key: a stream session
+    # holds per-step accumulators alive across pushes, so it must not
+    # share an executor bucket with offline one-shot requests.
+    ingest: str = "offline"
 
     # ---- derived schedules / introspection --------------------------------
 
@@ -282,6 +322,20 @@ class ReconPlan:
     def step_major(self) -> StepMajorSchedule:
         """First-class step-major schedule over the planned projections."""
         return build_step_major(self.steps, self.chunks, self.chunk_size)
+
+    @property
+    def stream(self) -> StreamSchedule:
+        """Arrival-ordered online schedule: one :class:`ChunkFold` per
+        projection chunk, runnable as soon as that chunk's views have
+        all arrived. Defined for any plan (the fold list is just the
+        chunk-major loop transposed), but executed only by stream
+        executors on ``ingest="stream"`` plans."""
+        work = tuple(ChunkWork(c, s0, s1)
+                     for c, (s0, s1) in enumerate(self.chunks))
+        return StreamSchedule(
+            n_chunks=len(work), chunk_size=self.chunk_size,
+            n_views=self.n_proj,
+            folds=tuple(ChunkFold(w, self.steps) for w in work))
 
     @property
     def program_keys(self) -> Tuple[Tuple[str, Tuple[int, int, int]], ...]:
@@ -312,7 +366,7 @@ class ReconPlan:
         return (self.vol_shape_xyz, self.det_shape_wh, self.variant,
                 self.tile_shape, self.nb, self.n_proj, self.n_proj_padded,
                 self.chunk_size, self.out, self.interpret, self.options,
-                self.schedule)
+                self.schedule, self.ingest)
 
     @property
     def working_set_bytes(self) -> int:
@@ -400,6 +454,7 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
                         interpret: bool = True,
                         schedule: Optional[str] = None,
                         request_batch: int = 1,
+                        ingest: str = "offline",
                         tuning=None,
                         **kernel_options) -> ReconPlan:
     """Build the :class:`ReconPlan` every entry point executes.
@@ -425,6 +480,16 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         ``memory_budget`` — the caller's byte-bound contract — resolves
         to "chunk" (whose residency the per-call working-set model
         soundly describes); everything else resolves to "step".
+    ingest : "offline" (default — the whole projection set is handed to
+        the executor at once) | "stream" (projections are PUSHED as the
+        scanner produces them; ``StreamingExecutor`` folds each view
+        chunk the moment it completes). Stream plans are forced
+        chunk-major — the completed chunk is the unit of arrival — so
+        ``ingest="stream"`` with an explicit ``schedule="step"`` is an
+        error, and ``schedule=None`` resolves to "chunk". Because a
+        ``TunedConfig`` does not carry an ingest axis, stream plans
+        always resolve heuristically: ``variant="auto"`` falls back to
+        the default kernel and ``tuning`` is ignored.
     request_batch : rb, the cross-request batch width this plan is
         sized for (>= 1; default 1 = the single-request plan). rb is
         NOT part of the bucket identity, but it scales the working-set
@@ -446,6 +511,14 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         per variant: defaulted ON for kernels whose KernelSpec
         advertises the capability, absent otherwise.
     """
+    if ingest not in ("offline", "stream"):
+        raise ValueError(
+            f"ingest must be 'offline' or 'stream', got {ingest!r}")
+    if ingest == "stream":
+        # TunedConfig has no ingest axis; stream plans stay heuristic
+        tuning = None
+        if variant == "auto":
+            variant = "algorithm1_mp"
     if variant == "auto" or tuning is not None:
         # lookup-only: the autotuner owns fingerprinting + the cache;
         # imported lazily so the heuristic path stays jax-free
@@ -465,8 +538,15 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
     if schedule not in (None, "step", "chunk"):
         raise ValueError(
             f"schedule must be 'step', 'chunk' or None, got {schedule!r}")
+    if ingest == "stream" and schedule == "step":
+        raise ValueError(
+            "ingest='stream' folds view chunks as they arrive, which is "
+            "chunk-major by construction; schedule='step' scans a "
+            "complete chunk stack and cannot start before the last view "
+            "— use schedule='chunk' or leave it unset")
     if schedule is None:
-        schedule = "chunk" if memory_budget is not None else "step"
+        schedule = ("chunk" if (ingest == "stream"
+                                or memory_budget is not None) else "step")
     nb = int(nb)
     if nb < 1:
         raise ValueError(f"nb must be >= 1, got {nb}")
@@ -511,7 +591,7 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         n_proj=n_proj, n_proj_padded=n_pad, chunk_size=chunk,
         out=out, interpret=interpret, steps=steps,
         options=tuple(sorted(spec.resolve_options(kernel_options).items())),
-        schedule=schedule, request_batch=request_batch)
+        schedule=schedule, request_batch=request_batch, ingest=ingest)
 
     if tile_given and memory_budget is not None and \
             plan.working_set_bytes > int(memory_budget):

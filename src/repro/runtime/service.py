@@ -40,6 +40,18 @@ exploits it:
     is bit-identical to the unbatched request. The autotuner searches
     ``max_batch`` (``TunedConfig.max_batch``) so tuned buckets cap
     batches at the measured per-hardware sweet spot.
+  * **streaming sessions** — ``open_stream(geom, ...)`` returns a
+    :class:`StreamSession`: projections are PUSHED as the scanner
+    produces them and each view-chunk back-projects the moment it
+    completes (``runtime.executor.StreamingExecutor``), hiding
+    reconstruction wall behind acquisition. Sessions bucket on
+    ``bucket_key`` like requests; a dedicated stream worker folds
+    same-phase chunks of concurrent same-bucket sessions through ONE
+    batched dispatch (the ``_BatchFormer`` machinery, keyed per view
+    chunk). ``close() -> volume`` is bit-identical to the offline
+    chunk-major reconstruction; per-session overlap metrics
+    (hidden-fraction, last-view-to-volume tail) stream into
+    :class:`ServiceStats`.
   * **measured tuning** — ``warmup(..., tune=True)`` runs the
     per-hardware autotuner (``runtime.autotune``) for each bucket
     before traffic: persisted winners resolve with zero re-measurement,
@@ -220,6 +232,19 @@ class BucketStats:
     steals: int = 0
     failovers: int = 0
     dead_devices: int = 0
+    # streaming sessions: ``streams`` opened / ``streams_closed``
+    # finished; one stream "dispatch" per folded chunk batch with
+    # ``stream_mean_lanes`` its realized cross-session fill;
+    # ``stream_tail_ms`` is the mean time from last view arrival to
+    # finished volume and ``stream_hidden_fraction`` the mean fraction
+    # of back-projection wall hidden behind acquisition (both over
+    # closed sessions)
+    streams: int = 0
+    streams_closed: int = 0
+    stream_dispatches: int = 0
+    stream_mean_lanes: Optional[float] = None
+    stream_tail_ms: Optional[float] = None
+    stream_hidden_fraction: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,6 +268,12 @@ class ServiceStats:
     max_batch: int = 1
     dispatches: int = 0
     mean_occupancy: Optional[float] = None
+    # streaming totals across buckets: sessions opened, plus the mean
+    # tail (last view -> volume) and hidden-fraction over all CLOSED
+    # sessions (None before any stream finishes)
+    streams: int = 0
+    stream_tail_ms: Optional[float] = None
+    stream_hidden_fraction: Optional[float] = None
 
     @property
     def hit_rate(self) -> float:
@@ -270,6 +301,24 @@ class _Request:
     geom: CTGeometry
     plan: ReconPlan
     config: object
+    key: tuple
+    deadline_s: Optional[float] = None
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class _StreamWork:
+    """One READY view-chunk of one open stream session.
+
+    Duck-types the :class:`_BatchFormer` item contract (``key`` /
+    ``priority`` / ``deadline_s``): ``key`` is the session's bucket key
+    PLUS the chunk index, so the former coalesces the same rotation
+    phase across concurrent same-bucket sessions into one batched fold
+    and never mixes phases (different chunk indices -> different keys).
+    """
+
+    session: "StreamSession"
+    chunk: int
     key: tuple
     deadline_s: Optional[float] = None
     priority: int = 0
@@ -305,7 +354,10 @@ class _BatchFormer:
         self._cond = threading.Condition()
         self._closed = False
         self._cap_fn = cap_fn
-        self._est_fn = est_fn if est_fn is not None else (lambda r: 0.0)
+        # est_fn returns the bucket's expected run seconds, or None
+        # while NO estimate exists (cold start) — the default knows
+        # nothing, so it must say so rather than claim "instant"
+        self._est_fn = est_fn if est_fn is not None else (lambda r: None)
         self.max_wait_s = float(max_wait_s)
 
     def put(self, req: _Request) -> None:
@@ -348,6 +400,14 @@ class _BatchFormer:
             if r.priority > 0:
                 return t0            # latency-critical: ship now
             if r.deadline_s is not None:
+                if est is None:
+                    # cold start: no latency estimate exists yet, so
+                    # deadline headroom cannot be computed — a 0
+                    # estimate would let the batch wait out the whole
+                    # deadline against a fictitious instant run. A
+                    # deadline-carrying member therefore never waits
+                    # until the bucket has completed traffic.
+                    return t0
                 # the wait must fit inside the member's deadline with
                 # the (estimated) reconstruction still to run
                 limit = min(limit, r.deadline_s - est)
@@ -398,6 +458,16 @@ class _Bucket:
         self.batched_requests = 0      # completed requests, all batches
         self.exec_total_s = 0.0        # wall summed once per dispatch
         self.batch_latency = LatencyHistogram()
+        # streaming counters (mutated under the service lock): one
+        # stream "dispatch" per folded chunk batch, ``stream_lanes``
+        # its summed lane count; tail/hidden accumulate each closed
+        # session's StreamReport for the overlap means in stats()
+        self.stream_sessions = 0
+        self.stream_closed = 0
+        self.stream_dispatches = 0
+        self.stream_lanes = 0
+        self.stream_tail_s = 0.0
+        self.stream_hidden = 0.0
 
     def snapshot(self) -> BucketStats:
         with self.executor._fleet_lock:
@@ -428,7 +498,18 @@ class _Bucket:
             amortized_us_per_request=(
                 round(self.exec_total_s / self.batched_requests * 1e6, 1)
                 if self.batched_requests else None),
-            max_batch=self.cap)
+            max_batch=self.cap,
+            streams=self.stream_sessions,
+            streams_closed=self.stream_closed,
+            stream_dispatches=self.stream_dispatches,
+            stream_mean_lanes=(round(self.stream_lanes /
+                                     self.stream_dispatches, 3)
+                               if self.stream_dispatches else None),
+            stream_tail_ms=(_ms(self.stream_tail_s / self.stream_closed)
+                            if self.stream_closed else None),
+            stream_hidden_fraction=(round(self.stream_hidden /
+                                          self.stream_closed, 3)
+                                    if self.stream_closed else None))
 
 
 # --------------------------------------------------------------------------
@@ -512,6 +593,10 @@ class ReconService:
         self._former = _BatchFormer(
             max_wait_s=self.max_wait_ms / 1e3,
             cap_fn=self._cap_for, est_fn=self._run_estimate)
+        # streaming: a dedicated former + ONE worker thread, created
+        # lazily by the first open_stream (most services never stream)
+        self._stream_former: Optional[_BatchFormer] = None
+        self._stream_thread: Optional[threading.Thread] = None
         self._closed = False
         self._workers = [
             threading.Thread(target=self._worker, name=f"recon-serve-{i}",
@@ -540,13 +625,16 @@ class ReconService:
             return bucket.cap
         return self._effective_cap(req.config)
 
-    def _run_estimate(self, req: _Request) -> float:
-        """Expected reconstruction seconds for deadline headroom math
-        (0.0 until the bucket has completed traffic)."""
+    def _run_estimate(self, req: _Request) -> Optional[float]:
+        """Expected reconstruction seconds for deadline headroom math,
+        or ``None`` while the bucket has NO completed traffic — the
+        explicit cold-start contract: with no estimate, a deadline-
+        carrying batch ships immediately instead of waiting out its
+        deadline against an estimate of 0 (see ``_wait_limit``)."""
         bucket = self._buckets.get(req.key)   # lock-free: see __init__
         if bucket is None:
-            return 0.0
-        return bucket.latency.mean() or 0.0
+            return None
+        return bucket.latency.mean()          # None while empty
 
     # ---- bucketing -------------------------------------------------------
 
@@ -581,6 +669,17 @@ class ReconService:
             memory_budget=opts.pop("memory_budget", None),
             proj_batch=opts.pop("proj_batch", None),
             out=opts.pop("out", None), schedule=opts.pop("schedule", None))
+        ingest = opts.pop("ingest", "offline")
+        if ingest != "offline":
+            # stream plans resolve heuristically (TunedConfig carries no
+            # ingest axis) and are chunk-major by construction; offline
+            # requests never carry the key, so the tuning-cache request
+            # key is unchanged by its existence (the planner validates
+            # the value)
+            if variant == "auto":
+                variant = "algorithm1_mp"
+            tuning = None
+            kw["ingest"] = ingest
         if self.fleet is not None:
             # fleet execution requires host accumulation over the step
             # schedule; default unset knobs to that placement (explicit
@@ -782,12 +881,142 @@ class ReconService:
                     if not r.fut.done():
                         r.fut.set_exception(exc)
 
+    # ---- streaming sessions ----------------------------------------------
+
+    def open_stream(self, geom: CTGeometry, *, priority: int = 0,
+                    max_pending_chunks: int = 2,
+                    **options) -> "StreamSession":
+        """Open an online reconstruction session (the service-level twin
+        of ``PlanExecutor.open_stream``): push projections as the
+        scanner produces them, ``close()`` returns the volume —
+        bit-identical to the offline chunk-major reconstruction of the
+        same views.
+
+        Sessions bucket on ``(geometry, plan.bucket_key)`` exactly like
+        requests (``ingest="stream"`` is part of the key, so stream and
+        offline traffic never share a bucket) and reuse the bucket's
+        warmed programs. Concurrent same-bucket sessions at the same
+        rotation phase coalesce: the stream worker folds up to
+        ``max_batch`` ready chunk-``c`` arrivals through ONE batched
+        dispatch (``ProgramCache.batch_program``), per-lane
+        bit-identical to an unbatched session. ``max_pending_chunks``
+        bounds the per-session arrival queue (``push`` blocks beyond
+        it); ``priority > 0`` ships this session's chunks without
+        waiting for peers. Options mirror ``submit`` (``proj_batch``
+        defaults to ~n_proj/8 views per chunk, the streaming grain).
+        """
+        if self.fleet is not None:
+            raise ValueError(
+                "streaming sessions do not compose with fleet "
+                "execution; construct the service without devices=")
+        opts = dict(options)
+        opts["ingest"] = "stream"
+        if opts.get("proj_batch") is None:
+            # a stream needs a real chunk grain: ~8 chunks per rotation
+            # (bounded below by nb so the planner's rounding is a no-op)
+            opts["proj_batch"] = max(int(opts.get("nb", 8)),
+                                     geom.n_proj // 8)
+        plan, config = self._plan(geom, opts)
+        bucket = self._bucket(geom, plan, config=config)
+        self._ensure_stream_worker()
+        with self._lock:
+            bucket.stream_sessions += 1
+        return StreamSession(self, bucket, priority=int(priority),
+                             max_pending_chunks=max_pending_chunks)
+
+    def _ensure_stream_worker(self) -> None:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("ReconService is closed")
+            if self._stream_former is not None:
+                return
+            self._stream_former = _BatchFormer(
+                max_wait_s=self.max_wait_ms / 1e3,
+                cap_fn=lambda w: max(1, self.max_batch),
+                est_fn=lambda w: None)   # chunk folds carry no deadlines
+            self._stream_thread = threading.Thread(
+                target=self._stream_worker, name="recon-stream",
+                daemon=True)
+            self._stream_thread.start()
+
+    def _stream_worker(self) -> None:
+        former = self._stream_former
+        while True:
+            batch = former.take()
+            if batch is None:
+                return
+            # the fold-order contract: chunk c of a session may only
+            # fold when it IS that session's next_fold. Out-of-order
+            # pushes can complete chunk c+1 first — its work item
+            # requeues until chunk c lands (whose own completion event
+            # wakes this worker again).
+            runnable: List[_StreamWork] = []
+            for w in batch:
+                if w.session._core.next_fold == w.chunk:
+                    runnable.append(w)
+                else:
+                    try:
+                        former.put(w)
+                    except RuntimeError as exc:
+                        w.session._core.fail(exc)
+            if not runnable:
+                time.sleep(0.002)      # only deferred items are queued
+                continue
+            try:
+                self._fold_stream_chunk(runnable)
+            except BaseException as exc:
+                for w in runnable:
+                    w.session._core.fail(exc)
+
+    def _fold_stream_chunk(self, works: List[_StreamWork]) -> None:
+        """Fold one ready view-chunk for k same-bucket sessions.
+
+        k == 1 delegates to the session core's own ``fold`` (which
+        overlaps the next chunk's filtering and self-times). k > 1
+        stacks the k filtered chunks on a leading lane axis and runs ONE
+        rb-lane program per plan step — vmap adds a batch axis and never
+        reassociates a lane's reduction, so each lane's accumulator
+        receives exactly the unbatched partial (the
+        ``PlanExecutor.execute_batch`` argument, per chunk)."""
+        c = works[0].chunk
+        bucket = works[0].session._bucket
+        cores = [w.session._core for w in works]
+        if len(cores) == 1:
+            cores[0].fold(c)
+        else:
+            ex = bucket.executor
+            plan = bucket.plan
+            t0 = time.perf_counter()
+            pairs = [core.filtered(c) for core in cores]
+            for core in cores:
+                core.prefilter(c + 1)  # overlap next chunk's filtering
+            img_b = jnp.stack([img for img, _ in pairs])
+            mat_c = pairs[0][1]        # same geometry -> same matrices
+            for i, step in enumerate(plan.steps):
+                prog = self.cache.batch_program(
+                    step.variant, step.call_shape, plan.nb, "float32",
+                    plan.interpret, plan.options, rb=len(cores))
+                out_b = prog(img_b, ex._translated(mat_c, step))
+                for r, core in enumerate(cores):
+                    core.accept_part(i, out_b[r])
+            wall = time.perf_counter() - t0
+            for core in cores:
+                core.chunk_done(c)
+                core.add_busy(wall)
+        with self._lock:
+            bucket.stream_dispatches += 1
+            bucket.stream_lanes += len(cores)
+
     # ---- lifecycle / introspection ---------------------------------------
 
     def stats(self) -> ServiceStats:
         with self._lock:
             live = list(self._buckets.values())
             buckets = tuple(b.snapshot() for b in live)
+            s_open = sum(b.stream_sessions for b in live)
+            s_closed = sum(b.stream_closed for b in live)
+            s_tail = sum(b.stream_tail_s for b in live)
+            s_hidden = sum(b.stream_hidden for b in live)
         overall = LatencyHistogram.merged(b.latency for b in live)
         dispatches = sum(b.dispatches for b in buckets)
         completed = sum(b.completed for b in buckets)
@@ -804,7 +1033,11 @@ class ReconService:
             max_batch=self.max_batch,
             dispatches=dispatches,
             mean_occupancy=(round(completed / dispatches, 3)
-                            if dispatches else None))
+                            if dispatches else None),
+            streams=s_open,
+            stream_tail_ms=(_ms(s_tail / s_closed) if s_closed else None),
+            stream_hidden_fraction=(round(s_hidden / s_closed, 3)
+                                    if s_closed else None))
 
     def close(self, wait: bool = True) -> None:
         """Stop accepting requests; drain workers (idempotent).
@@ -817,12 +1050,80 @@ class ReconService:
         # outside the service lock: the former's condition is also
         # taken by forming workers that read buckets (lock ordering)
         self._former.close()
+        if self._stream_former is not None:
+            self._stream_former.close()
         if wait:
             for t in self._workers:
                 t.join()
+            if self._stream_thread is not None:
+                self._stream_thread.join()
 
     def __enter__(self) -> "ReconService":
         return self
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class StreamSession:
+    """One open projection stream bound to a service bucket.
+
+    ``push(views)`` hands view rows to the session's
+    :class:`~repro.runtime.executor.StreamingExecutor` core; each
+    completed view-chunk queues a :class:`_StreamWork` to the service's
+    stream worker, which folds same-phase chunks of concurrent
+    same-bucket sessions through one batched dispatch. ``close()``
+    blocks for the tail folds and returns the volume; the session's
+    :class:`~repro.runtime.executor.StreamReport` then lands in the
+    bucket's overlap counters (``ServiceStats.stream_tail_ms`` /
+    ``stream_hidden_fraction``)."""
+
+    def __init__(self, service: ReconService, bucket: _Bucket, *,
+                 priority: int = 0, max_pending_chunks: int = 2):
+        self._service = service
+        self._bucket = bucket
+        self._priority = int(priority)
+        self._key_base = (bucket.geom, bucket.plan.bucket_key)
+        self._core = bucket.executor.open_stream(
+            max_pending_chunks=max_pending_chunks, on_ready=self._ready)
+
+    def _ready(self, chunk: int) -> None:
+        """StreamingExecutor callback: chunk complete -> queue its fold.
+        Runs on the pushing thread with the core's condition RELEASED
+        (the core guarantees it), so the former's put is safe here."""
+        work = _StreamWork(session=self, chunk=chunk,
+                           key=self._key_base + (chunk,),
+                           priority=self._priority)
+        try:
+            self._service._stream_former.put(work)
+        except RuntimeError as exc:      # service closed mid-stream
+            self._core.fail(exc)
+
+    def push(self, views, start: Optional[int] = None) -> None:
+        """Deliver view rows (blocks only on arrival-queue backpressure)."""
+        self._core.push(views, start=start)
+
+    @property
+    def report(self):
+        """The core's :class:`StreamReport` (None until closed)."""
+        return self._core.report
+
+    def close(self):
+        """Finish the stream and return the volume (nz, ny, nx)."""
+        vol = self._core.close()
+        rep = self._core.report
+        with self._service._lock:
+            self._bucket.stream_closed += 1
+            if rep is not None:
+                self._bucket.stream_tail_s += rep.tail_s
+                self._bucket.stream_hidden += rep.hidden_fraction
+        return vol
+
+    def __enter__(self) -> "StreamSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if exc and exc[0] is not None:
+            self._core.fail(exc[1])
+        elif not self._core._ingest_closed:   # tolerate explicit close()
+            self.close()

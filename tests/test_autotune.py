@@ -22,6 +22,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 import numpy as np
 import pytest
@@ -412,3 +413,76 @@ def test_config_speedup_and_replace(setup):
     cfg = dataclasses.replace(cfg, wall_us=50.0, baseline_us=100.0)
     assert cfg.speedup == pytest.approx(2.0)
     assert at.config_from_plan(plan).speedup == 1.0   # unmeasured
+
+
+# ---- self-maintaining cache: stale-entry revalidation ----------------------
+
+def _entry_key(cache):
+    fp = list(cache.entries())[0]
+    return fp, list(cache.entries()[fp])[0]
+
+
+def test_stale_drifted_entry_invalidates_and_retunes(setup, tmp_path):
+    """A stale entry whose recorded baseline is wildly off for this
+    machine (planted: 1000x) must be invalidated on resolve and the
+    full search re-run — the self-maintenance contract."""
+    geom, projs = setup
+    cache = TuningCache(str(tmp_path / "t.json"))
+    cfg = _tune(geom, projs, "algorithm1_mp", cache)
+    assert cfg.source == "measured" and cfg.tuned_at > 0
+    fp, rkey = _entry_key(cache)
+    bad = dataclasses.replace(cfg, baseline_us=cfg.baseline_us / 1000.0,
+                              tuned_at=time.time() - 7 * 86400)
+    cache.store(fp, rkey, bad)
+    redo = _tune(geom, projs, "algorithm1_mp", cache)
+    assert redo.source == "measured" and redo.trials > 0
+    assert cache.lookup(fp, rkey).tuned_at > time.time() - 600
+
+
+def test_stale_consistent_entry_restamps_without_retune(setup, tmp_path):
+    """A stale entry whose baseline still matches reality keeps its
+    winner: one cheap probe, a freshness restamp, zero search trials.
+    The RECORDED baseline is kept (restamping it too would let slow
+    drift creep under the threshold)."""
+    geom, projs = setup
+    cache = TuningCache(str(tmp_path / "t.json"))
+    cfg = _tune(geom, projs, "algorithm1_mp", cache)
+    fp, rkey = _entry_key(cache)
+    old = dataclasses.replace(cfg, tuned_at=time.time() - 7 * 86400)
+    cache.store(fp, rkey, old)
+    hit = _tune(geom, projs, "algorithm1_mp", cache)
+    assert hit.source == "cache" and hit.trials == 0
+    restamped = cache.lookup(fp, rkey)
+    assert restamped.tuned_at > time.time() - 600
+    assert restamped.baseline_us == old.baseline_us
+
+
+def test_fresh_entry_still_resolves_without_measuring(setup, tmp_path,
+                                                      monkeypatch):
+    """The revalidation probe must not tax the fast path: a FRESH hit
+    (younger than revalidate_s) never enters _measure_config."""
+    geom, projs = setup
+    cache = TuningCache(str(tmp_path / "t.json"))
+    _tune(geom, projs, "algorithm1_mp", cache)
+
+    def boom(*a, **k):
+        raise AssertionError("fresh cache hit must not measure")
+
+    monkeypatch.setattr(at, "_measure_config", boom)
+    hit = _tune(geom, projs, "algorithm1_mp", cache)
+    assert hit.source == "cache" and hit.trials == 0
+
+
+def test_invalidate_and_legacy_staleness(setup, tmp_path):
+    geom, projs = setup
+    cache = TuningCache(str(tmp_path / "t.json"))
+    cfg = _tune(geom, projs, "algorithm1_mp", cache)
+    fp, rkey = _entry_key(cache)
+    # documents written before the tuned_at field existed deserialize
+    # as always-stale (first resolve revalidates them)
+    doc = cfg.to_json()
+    del doc["tuned_at"]
+    assert TunedConfig.from_json(doc).tuned_at == 0.0
+    assert cache.invalidate(fp, "missing-key") is False
+    assert cache.invalidate(fp, rkey) is True
+    assert cache.lookup(fp, rkey) is None

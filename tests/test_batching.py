@@ -386,3 +386,32 @@ def test_tuned_config_max_batch_roundtrip(setup):
     # the config re-plans with its rb baked into the working-set model
     plan = cfg.build_plan(geom)
     assert plan.request_batch == 4
+
+
+# ---- cold-start wait policy (no estimate -> no deadline wait) --------------
+
+def test_former_cold_start_deadline_ships_immediately():
+    """Before a bucket has ANY completed traffic its latency estimate
+    is None; a deadline-carrying partial batch must ship immediately
+    rather than waiting out its whole deadline against a fictitious
+    estimate of 0 (the pre-fix behavior: headroom = deadline - 0)."""
+    f = _BatchFormer(max_wait_s=30.0, cap_fn=lambda r: 4)  # default est_fn
+    f.put(_req("a", deadline_s=time.perf_counter() + 25.0))
+    t0 = time.perf_counter()
+    batch = f.take()
+    assert [r.key for r in batch] == ["a"]
+    assert time.perf_counter() - t0 < 1.0     # not the 25 s headroom
+
+
+def test_service_estimate_none_until_traffic(setup):
+    geom, reqs = setup
+    svc = ReconService(max_inflight=1, cache=ProgramCache())
+    try:
+        plan, cfg = svc._plan(geom, dict(OPTS))
+        probe = _Request(fut=Future(), projections=None, geom=geom,
+                         plan=plan, config=cfg, key=(geom, plan.bucket_key))
+        assert svc._run_estimate(probe) is None      # cold start
+        svc.reconstruct(reqs[0], geom, **OPTS)
+        assert svc._run_estimate(probe) is not None  # traffic -> estimate
+    finally:
+        svc.close()

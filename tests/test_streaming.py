@@ -1,0 +1,273 @@
+"""Online (streaming) ingestion: exactness and behavior.
+
+The streaming contract under test: pushing views as they "arrive" and
+folding each view-chunk the moment it completes produces output
+BIT-IDENTICAL to the offline chunk-major reconstruction of the same
+views — same chunk partition, same per-step device adds in chunk-index
+order, same final host/device accumulation. The suite covers the
+partition edge cases (arrival-order permutations within a chunk, a
+ragged tail chunk), the producer/consumer races (slow producer starves
+the folder; fast producer hits the bounded arrival queue), ≥4 variants
+including a Pallas kernel, and the service session layer (concurrent
+same-bucket sessions batched per rotation phase).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.geometry import standard_geometry
+from repro.runtime.executor import PlanExecutor, ProgramCache
+from repro.runtime.planner import plan_reconstruction
+from repro.runtime.service import ReconService
+
+# shared across the module: streaming must reuse, not recompile
+_PCACHE = ProgramCache()
+
+GEOM = standard_geometry(n=16, n_det=24, n_proj=8)
+PROJS = np.random.default_rng(11).normal(
+    size=(GEOM.n_proj, GEOM.nh, GEOM.nw)).astype(np.float32)
+
+
+def _stream_plan(geom=GEOM, variant="algorithm1_mp", *, nb=2,
+                 proj_batch=2, **kw):
+    return plan_reconstruction(geom, variant, nb=nb, proj_batch=proj_batch,
+                               ingest="stream", **kw)
+
+
+def _push_all(se, projs, order=None, group=1, dt=0.0):
+    """Feed rows one-by-one (or ``group`` at a time) in ``order``."""
+    n = projs.shape[0]
+    order = list(range(n)) if order is None else list(order)
+    for i in range(0, n, group):
+        rows = order[i:i + group]
+        for r in rows:
+            se.push(projs[r], start=r)
+        if dt:
+            time.sleep(dt)
+
+
+# ---------------------------------------------------------------------------
+# plan-level: the ingest axis
+# ---------------------------------------------------------------------------
+
+def test_stream_plan_is_chunk_major_and_bucketed_apart():
+    plan = _stream_plan()
+    off = plan_reconstruction(GEOM, "algorithm1_mp", nb=2, proj_batch=2,
+                              schedule="chunk")
+    assert plan.ingest == "stream" and plan.schedule == "chunk"
+    assert off.ingest == "offline"
+    # same chunk partition (the exactness precondition) ...
+    assert plan.chunks == off.chunks
+    # ... but stream sessions must never share a bucket with requests
+    assert plan.bucket_key != off.bucket_key
+
+
+def test_stream_plan_rejects_step_schedule():
+    with pytest.raises(ValueError, match="stream"):
+        plan_reconstruction(GEOM, "algorithm1_mp", nb=2, proj_batch=2,
+                            ingest="stream", schedule="step")
+    with pytest.raises(ValueError, match="ingest"):
+        plan_reconstruction(GEOM, "algorithm1_mp", ingest="bogus")
+
+
+def test_stream_schedule_lists_per_chunk_work():
+    plan = _stream_plan(proj_batch=2)   # 8 views / chunk_size 2
+    s = plan.stream
+    assert s.n_views == GEOM.n_proj
+    assert s.n_chunks == len(plan.chunks) == 4
+    assert [f.chunk.index for f in s.folds] == [0, 1, 2, 3]
+    assert all(f.steps == plan.steps for f in s.folds)
+
+
+# ---------------------------------------------------------------------------
+# executor-level parity: streamed == offline, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", [
+    "algorithm1_mp", "subline_batch_mp", "symmetry_mp", "subline_pl"])
+def test_stream_parity_across_variants(variant):
+    plan = _stream_plan(variant=variant)
+    ex = PlanExecutor(GEOM, plan, cache=_PCACHE)
+    ref = np.asarray(ex.reconstruct(jnp.asarray(PROJS)))
+    se = ex.open_stream()
+    _push_all(se, PROJS)
+    assert np.array_equal(np.asarray(se.close()), ref)
+
+
+def test_stream_parity_tiled_async_host_out():
+    plan = _stream_plan(tile_shape=(8, 8, 16), out="host")
+    ex = PlanExecutor(GEOM, plan, cache=_PCACHE, pipeline="async")
+    ref = np.asarray(ex.reconstruct(jnp.asarray(PROJS)))
+    se = ex.open_stream()
+    _push_all(se, PROJS, group=3)       # pushes need not align to chunks
+    assert np.array_equal(np.asarray(se.close()), ref)
+
+
+def test_stream_parity_device_out():
+    plan = _stream_plan(out="device")
+    ex = PlanExecutor(GEOM, plan, cache=_PCACHE)
+    ref = np.asarray(ex.reconstruct(jnp.asarray(PROJS)))
+    se = ex.open_stream()
+    _push_all(se, PROJS)
+    assert np.array_equal(np.asarray(se.close()), ref)
+
+
+def test_stream_parity_under_within_chunk_permutation():
+    # arrival order inside a chunk must not matter: the chunk buffer is
+    # assembled by row index, and filtering/folding only start once the
+    # chunk is COMPLETE
+    plan = _stream_plan(proj_batch=4)   # chunks of 4 views
+    ex = PlanExecutor(GEOM, plan, cache=_PCACHE)
+    ref = np.asarray(ex.reconstruct(jnp.asarray(PROJS)))
+    order = [2, 0, 3, 1, 6, 5, 4, 7]    # permuted within each chunk
+    se = ex.open_stream()
+    _push_all(se, PROJS, order=order)
+    assert np.array_equal(np.asarray(se.close()), ref)
+
+
+def test_stream_parity_ragged_tail_chunk():
+    geom = standard_geometry(n=16, n_det=24, n_proj=10)
+    projs = np.random.default_rng(5).normal(
+        size=(10, geom.nh, geom.nw)).astype(np.float32)
+    # chunk_size 8 over n_proj_padded -> tail chunk holds 2 raw views
+    plan = plan_reconstruction(geom, "algorithm1_mp", nb=4, proj_batch=8,
+                               ingest="stream")
+    assert plan.chunks[-1][1] > geom.n_proj  # the tail IS ragged
+    ex = PlanExecutor(geom, plan, cache=_PCACHE)
+    ref = np.asarray(ex.reconstruct(jnp.asarray(projs)))
+    se = ex.open_stream()
+    _push_all(se, projs, group=3)       # 3 never divides either chunk
+    assert np.array_equal(np.asarray(se.close()), ref)
+
+
+def test_stream_slow_producer_starves_folder():
+    # folder idles between arrivals; every chunk still folds in order
+    plan = _stream_plan(proj_batch=2)
+    ex = PlanExecutor(GEOM, plan, cache=_PCACHE)
+    ref = np.asarray(ex.reconstruct(jnp.asarray(PROJS)))
+    se = ex.open_stream()
+    _push_all(se, PROJS, dt=0.02)
+    assert np.array_equal(np.asarray(se.close()), ref)
+
+
+def test_stream_fast_producer_hits_backpressure():
+    # a producer faster than the folder blocks on the bounded arrival
+    # queue instead of buffering the whole scan
+    plan = _stream_plan(proj_batch=2)
+    ex = PlanExecutor(GEOM, plan, cache=_PCACHE)
+    ref = np.asarray(ex.reconstruct(jnp.asarray(PROJS)))
+    se = ex.open_stream(max_pending_chunks=1)
+    _push_all(se, PROJS)                # as fast as push() admits
+    assert np.array_equal(np.asarray(se.close()), ref)
+    assert se.max_pending_seen <= 1
+
+
+def test_stream_push_errors():
+    ex = PlanExecutor(GEOM, _stream_plan(), cache=_PCACHE)
+    se = ex.open_stream()
+    se.push(PROJS[0], start=0)
+    with pytest.raises(ValueError, match="twice"):
+        se.push(PROJS[0], start=0)
+    with pytest.raises(ValueError):
+        se.push(PROJS[0], start=GEOM.n_proj + 3)
+    with pytest.raises(RuntimeError, match="closed"):
+        se.close()                      # 1 of 8 views delivered
+    with pytest.raises(RuntimeError):
+        se.push(PROJS[1], start=1)      # stream already failed/closed
+
+
+# ---------------------------------------------------------------------------
+# service sessions
+# ---------------------------------------------------------------------------
+
+def test_service_stream_session_parity_and_stats():
+    projs2 = np.random.default_rng(7).normal(
+        size=PROJS.shape).astype(np.float32)
+    svc = ReconService(max_inflight=1, max_batch=2, max_wait_ms=150.0,
+                       cache=_PCACHE)
+    try:
+        s1 = svc.open_stream(GEOM, nb=2, proj_batch=2)
+        s2 = svc.open_stream(GEOM, nb=2, proj_batch=2)
+        for v in range(GEOM.n_proj):    # lockstep: same rotation phase
+            s1.push(PROJS[v], start=v)
+            s2.push(projs2[v], start=v)
+        v1, v2 = s1.close(), s2.close()
+        bucket = next(b for b in svc._buckets.values()
+                      if b.plan.ingest == "stream")
+        oracle = PlanExecutor(GEOM, bucket.plan, cache=_PCACHE)
+        assert np.array_equal(np.asarray(v1),
+                              np.asarray(oracle.reconstruct(
+                                  jnp.asarray(PROJS))))
+        assert np.array_equal(np.asarray(v2),
+                              np.asarray(oracle.reconstruct(
+                                  jnp.asarray(projs2))))
+        st = svc.stats()
+        assert st.streams == 2
+        assert st.stream_tail_ms is not None
+        assert st.stream_hidden_fraction is not None
+        row = next(b for b in st.buckets if b.streams)
+        assert row.streams == 2 and row.streams_closed == 2
+        # 4 chunks/session: fully batched = 4 dispatches, worst case 8
+        assert 4 <= row.stream_dispatches <= 8
+        assert row.stream_mean_lanes >= 1.0
+    finally:
+        svc.close()
+
+
+def test_service_stream_defaults_single_session():
+    svc = ReconService(cache=_PCACHE)
+    try:
+        with svc.open_stream(GEOM) as sess:
+            _push_all(sess, PROJS)
+            vol = sess.close()
+        bucket = next(b for b in svc._buckets.values()
+                      if b.plan.ingest == "stream")
+        ref = PlanExecutor(GEOM, bucket.plan, cache=_PCACHE).reconstruct(
+            jnp.asarray(PROJS))
+        assert np.array_equal(np.asarray(vol), np.asarray(ref))
+        assert sess.report is not None
+        assert 0.0 <= sess.report.hidden_fraction <= 1.0
+    finally:
+        svc.close()
+
+
+def test_service_stream_rejects_fleet():
+    svc = ReconService(cache=_PCACHE, devices=1)
+    try:
+        with pytest.raises(ValueError, match="fleet"):
+            svc.open_stream(GEOM)
+    finally:
+        svc.close()
+
+
+def test_service_stream_concurrent_feeders():
+    # two producer threads at different paces; the shared stream worker
+    # must respect each session's own fold order
+    projs2 = np.random.default_rng(3).normal(
+        size=PROJS.shape).astype(np.float32)
+    svc = ReconService(max_inflight=1, max_batch=2, max_wait_ms=20.0,
+                       cache=_PCACHE)
+    try:
+        s1 = svc.open_stream(GEOM, nb=2, proj_batch=2)
+        s2 = svc.open_stream(GEOM, nb=2, proj_batch=2)
+        t1 = threading.Thread(target=_push_all, args=(s1, PROJS),
+                              kwargs=dict(dt=0.005))
+        t2 = threading.Thread(target=_push_all, args=(s2, projs2))
+        t1.start(); t2.start(); t1.join(); t2.join()
+        v1, v2 = s1.close(), s2.close()
+        bucket = next(b for b in svc._buckets.values()
+                      if b.plan.ingest == "stream")
+        oracle = PlanExecutor(GEOM, bucket.plan, cache=_PCACHE)
+        assert np.array_equal(np.asarray(v1),
+                              np.asarray(oracle.reconstruct(
+                                  jnp.asarray(PROJS))))
+        assert np.array_equal(np.asarray(v2),
+                              np.asarray(oracle.reconstruct(
+                                  jnp.asarray(projs2))))
+    finally:
+        svc.close()
