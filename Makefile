@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
 	bench-smoke bench-service bench-autotune bench-fleet bench-stream \
-	test-fleet serve
+	bench-solvers test-fleet serve
 
 tier1:
 	tests/run_tier1.sh
@@ -32,6 +32,9 @@ bench-fleet:                   # single vs fleet (subprocess: 8 devices)
 
 bench-stream:                  # online ingestion: tail + hidden fraction
 	$(PY) -m benchmarks.bench_stream
+
+bench-solvers:                 # iterative loops: warm us/iter + bf16 axis
+	$(PY) -m benchmarks.bench_solvers
 
 test-fleet:                    # the multidevice CI lane, locally
 	$(PY) -m pytest -q tests/test_fleet.py tests/test_distributed.py \

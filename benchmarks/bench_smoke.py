@@ -10,7 +10,10 @@ FDK — the serving-layer cold/warm + pipeline-overlap numbers
 winners persist in the tuning cache at ``$REPRO_TUNING_CACHE``, which
 CI uploads as an artifact), the streaming-ingestion overlap numbers
 (``bench_stream`` — last-view-to-volume tail vs offline wall and the
-hidden fraction of a simulated scanner run), and a bigger-size
+hidden fraction of a simulated scanner run), the iterative-solver
+loops (``bench_solvers`` — warm amortized per-iteration wall vs the
+compile-heavy first iteration, plus the bf16 precision axis), and a
+bigger-size
 re-measure of the symmetry
 family (the BENCH_PR2 ``symmetry_mp`` 0.48x number was part real
 regression — fixed by the affine-fold mirror in core/backproject.py —
@@ -44,8 +47,8 @@ from repro.core import projection_matrices, standard_geometry, \
     transpose_projections
 from repro.core.variants import get_variant
 
-from . import bench_autotune, bench_service, bench_stream, bench_tiled, \
-    bench_variants, common
+from . import bench_autotune, bench_service, bench_solvers, bench_stream, \
+    bench_tiled, bench_variants, common
 
 # Smoke sizes: big enough that tiling/batching structure is exercised
 # (several tiles, several nb-batches), small enough for a CI stage.
@@ -156,6 +159,8 @@ def main(argv=None) -> None:
     bench_autotune.run(**sizes, budget_s=args.autotune_budget)
     print("# --- streaming (simulated scanner) ---")
     bench_stream.run(**sizes)
+    print("# --- iterative solvers (warm amortized per-iteration) ---")
+    bench_solvers.run(**sizes)
     print("# --- symmetry family (realistic size) ---")
     symmetry_recheck(**BIG)
     if args.json:

@@ -1,0 +1,54 @@
+"""Performance-portable cone-beam back-projection (paper reproduction).
+
+Top level of the public API:
+
+    import repro
+    vol = repro.reconstruct(projections, geom, method="fdk",
+                            options=repro.ReconOptions(nb=8))
+
+Everything resolves lazily (PEP 562) so ``import repro`` stays cheap —
+jax and the kernel registry only load when a symbol is first touched.
+"""
+
+from typing import TYPE_CHECKING
+
+_LAZY = {
+    "reconstruct": ("repro.api", "reconstruct"),
+    "ReconOptions": ("repro.api", "ReconOptions"),
+    "fdk_reconstruct": ("repro.core.fdk", "fdk_reconstruct"),
+    "sart_step": ("repro.core.fdk", "sart_step"),
+    "forward_project": ("repro.core.forward", "forward_project"),
+    "solve": ("repro.runtime.solvers", "solve"),
+    "SolveReport": ("repro.runtime.solvers", "SolveReport"),
+    "IterativeExecutor": ("repro.runtime.solvers", "IterativeExecutor"),
+    "CTGeometry": ("repro.core.geometry", "CTGeometry"),
+    "standard_geometry": ("repro.core.geometry", "standard_geometry"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    try:
+        module, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value    # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))
+
+
+if TYPE_CHECKING:   # static importers see the real symbols
+    from repro.api import ReconOptions, reconstruct  # noqa: F401
+    from repro.core.fdk import fdk_reconstruct, sart_step  # noqa: F401
+    from repro.core.forward import forward_project  # noqa: F401
+    from repro.core.geometry import CTGeometry, standard_geometry  # noqa: F401
+    from repro.runtime.solvers import (  # noqa: F401
+        IterativeExecutor, SolveReport, solve)

@@ -26,6 +26,7 @@ def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
                 tiling, memory_budget: Optional[int],
                 proj_batch: Optional[int], out: Optional[str],
                 schedule: Optional[str] = None, ingest: str = "offline",
+                precision: str = "f32", solver: str = "none",
                 tuning=None, **kernel_options):
     """Shared façade-to-planner translation (tiling= conventions)."""
     from repro.runtime.planner import plan_reconstruction
@@ -37,11 +38,12 @@ def _build_plan(geom: CTGeometry, variant: str, *, nb: int, interpret: bool,
             "tile shape; pass one or give an explicit (ti, tj, tk)")
     tile_shape = None if tiling in (None, "auto") else tuple(tiling)
     if out is None:
-        out = "host" if tiled else "device"
+        out = "host" if tiled and solver == "none" else "device"
     return plan_reconstruction(
         geom, variant, tile_shape=tile_shape, memory_budget=memory_budget,
         nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
-        schedule=schedule, ingest=ingest, tuning=tuning, **kernel_options)
+        schedule=schedule, ingest=ingest, precision=precision,
+        solver=solver, tuning=tuning, **kernel_options)
 
 
 def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
@@ -53,6 +55,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
                     out: Optional[str] = None,
                     schedule: Optional[str] = None,
                     pipeline: Optional[str] = None,
+                    precision: str = "f32",
                     tuning=None,
                     service=None,
                     devices=None,
@@ -126,7 +129,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
             projections, geom, variant=variant, nb=nb, interpret=interpret,
             tiling=tiling, memory_budget=memory_budget,
             proj_batch=proj_batch, out=out, schedule=schedule,
-            tuning=tuning, **kernel_options)
+            precision=precision, tuning=tuning, **kernel_options)
     fleet = as_fleet_config(devices)
     if fleet is not None:
         # the fleet accumulates per-device step outputs into a host
@@ -143,7 +146,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
             geom, variant, cache=as_tuning_cache(tuning), nb=nb,
             interpret=interpret, tiling=tiling,
             memory_budget=memory_budget, proj_batch=proj_batch, out=out,
-            schedule=schedule, **kernel_options)
+            schedule=schedule, precision=precision, **kernel_options)
         if pipeline is None and fleet is None:
             ex = PlanExecutor.from_config(geom, cfg)
         else:                         # explicit override beats the cache
@@ -156,7 +159,7 @@ def fdk_reconstruct(projections: jnp.ndarray, geom: CTGeometry,
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
                        proj_batch=proj_batch, out=out, schedule=schedule,
-                       **kernel_options)
+                       precision=precision, **kernel_options)
     return PlanExecutor(
         geom, plan,
         pipeline="sync" if pipeline is None else pipeline,
@@ -180,6 +183,7 @@ def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
               memory_budget: Optional[int] = None,
               proj_batch: Optional[int] = None,
               schedule: Optional[str] = None,
+              precision: str = "f32",
               **kernel_options) -> jnp.ndarray:
     """One SART update (demonstrates the paper's iterative-recon use).
 
@@ -189,16 +193,17 @@ def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
 
     FP(1_vol) are the per-ray intersection lengths (projection-domain
     row sums of the system matrix); BP(1) the voxel-domain column sums.
-    Both normalizers reuse the same forward/back projection kernels.
 
-    Both back-projections route through one :class:`ReconPlan`, so
-    ``interpret=`` reaches the Pallas variants and ``tiling=`` /
-    ``memory_budget=`` / ``proj_batch=`` give iterative reconstruction
-    the same out-of-core streaming as ``fdk_reconstruct``.
+    Thin façade over ``runtime.solvers`` (``n_iters=1``): repeated
+    calls with the same configuration land on the SAME persistent
+    :class:`~repro.runtime.solvers.IterativeExecutor`, so the
+    normalizers are computed once and iterations 2..N of a caller's
+    outer loop dispatch warm — no per-call ``PlanExecutor`` rebuild.
+    ``interpret=`` still reaches the Pallas variants and ``tiling=`` /
+    ``memory_budget=`` / ``proj_batch=`` keep the bounded per-call
+    working set of ``fdk_reconstruct``.
     """
-    from repro.runtime.executor import PlanExecutor
-    from . import backproject as bp
-    from .forward import forward_project
+    from repro.runtime.solvers import solver_executor
 
     # out="device" even when tiled: SART's forward projection needs the
     # volume on device every iteration anyway, so host staging of the
@@ -208,17 +213,9 @@ def sart_step(vol_zyx: jnp.ndarray, projections: jnp.ndarray,
     plan = _build_plan(geom, variant, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
                        proj_batch=proj_batch, out="device",
-                       schedule=schedule, **kernel_options)
-    ex = PlanExecutor(geom, plan)
-
-    mats = projection_matrices(geom)
-    est = forward_project(vol_zyx, geom, oversample=oversample)
-    ray_len = forward_project(jnp.ones_like(vol_zyx), geom,
-                              oversample=oversample)
-    resid = (projections - est) / jnp.maximum(ray_len, 1e-3)
-    upd = _vol_to_native(ex.backproject(bp.transpose_projections(resid),
-                                        mats))
-    ones_t = bp.transpose_projections(jnp.ones_like(projections))
-    norm = _vol_to_native(ex.backproject(ones_t, mats))
-    return vol_zyx + relax * jnp.asarray(upd) / jnp.maximum(
-        jnp.asarray(norm), 1e-12)
+                       schedule=schedule, precision=precision,
+                       solver="sart", **kernel_options)
+    ex = solver_executor(geom, plan, oversample=oversample)
+    vol, _report = ex.solve(projections, n_iters=1, relax=relax,
+                            x0=vol_zyx)
+    return vol

@@ -14,6 +14,7 @@ paper's contribution is back-projection.
 from __future__ import annotations
 
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,10 +56,9 @@ def trilinear_sample(vol_zyx: jnp.ndarray, px, py, pz, origin, inv_pitch):
     return jnp.where(valid, c0 * (1 - dz) + c1 * dz, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_steps", "nh", "nw"))
-def _project_view(vol_zyx, src, det_origin, ustep, vstep, vol_origin,
-                  inv_pitch, n_steps: int, nh: int, nw: int, step_len,
-                  t_near):
+def _project_view_impl(vol_zyx, src, det_origin, ustep, vstep, vol_origin,
+                       inv_pitch, n_steps: int, nh: int, nw: int, step_len,
+                       t_near):
     """One projection image (nh, nw) for one view."""
     u = jnp.arange(nw, dtype=jnp.float32)
     v = jnp.arange(nh, dtype=jnp.float32)
@@ -84,30 +84,89 @@ def _project_view(vol_zyx, src, det_origin, ustep, vstep, vol_origin,
     return acc * step_len
 
 
-def forward_project(vol_zyx: jnp.ndarray, geom: CTGeometry,
-                    oversample: float = 2.0) -> jnp.ndarray:
-    """Project volume (nz, ny, nx) into (np, nh, nw) projections."""
+# kept under its historical name: one jitted per-view program
+_project_view = jax.jit(_project_view_impl,
+                        static_argnames=("n_steps", "nh", "nw"))
+
+# one vmapped program serves a whole view chunk: the leading axis runs
+# over per-view frames (src / det_origin / ustep / vstep), everything
+# else — the volume, the march constants — is shared. jax.jit's own
+# cache keys on (chunk length, static march grid), so equal-size chunks
+# compile once; runtime.solvers additionally pins the builder behind a
+# ProgramCache key so iterative compile counts stay auditable.
+_project_views = jax.jit(
+    jax.vmap(_project_view_impl,
+             in_axes=(None, 0, 0, 0, 0, None, None, None, None, None,
+                      None, None)),
+    static_argnames=("n_steps", "nh", "nw"))
+
+
+def march_params(geom: CTGeometry, oversample: float = 2.0):
+    """Ray-march constants shared by every view of one geometry:
+    ``(vol_origin, inv_pitch, step_len, t_near, n_steps)``. The march
+    covers the volume's circumscribing sphere only."""
     sx, sy, sz = geom.voxel_size
     xs, ys, zs = voxel_world_coords(geom)
     vol_origin = jnp.asarray([xs[0], ys[0], zs[0]], jnp.float32)
     inv_pitch = jnp.asarray([1 / sx, 1 / sy, 1 / sz], jnp.float32)
-    # March through the volume's circumscribing sphere only.
     radius = 0.5 * float(np.sqrt((geom.nx*sx)**2 + (geom.ny*sy)**2
                                  + (geom.nz*sz)**2))
     t_near = geom.sad - radius
     t_far = geom.sad + radius
     step_len = min(sx, sy, sz) / oversample
     n_steps = int(np.ceil((t_far - t_near) / step_len))
-    srcs = source_positions(geom)
+    return vol_origin, inv_pitch, float(step_len), float(t_near), n_steps
 
-    views = []
+
+def view_frames(geom: CTGeometry):
+    """Per-view ray frames, stacked: ``(srcs, origins, usteps, vsteps)``
+    each of shape (n_proj, 3) float32 — the vmapped axis of
+    :data:`_project_views`."""
+    srcs = source_positions(geom)
+    origins = np.empty((geom.n_proj, 3), np.float32)
+    usteps = np.empty((geom.n_proj, 3), np.float32)
+    vsteps = np.empty((geom.n_proj, 3), np.float32)
     for p, theta in enumerate(geom.angles):
-        det_origin, ustep, vstep = detector_frame(geom, float(theta))
-        view = _project_view(
-            vol_zyx, jnp.asarray(srcs[p]), jnp.asarray(det_origin),
-            jnp.asarray(ustep), jnp.asarray(vstep),
+        origins[p], usteps[p], vsteps[p] = detector_frame(geom, float(theta))
+    return srcs, origins, usteps, vsteps
+
+
+def forward_project(vol_zyx: jnp.ndarray, geom: CTGeometry,
+                    oversample: float = 2.0, *,
+                    proj_batch: int | None = None,
+                    views: slice | Sequence[int] | None = None
+                    ) -> jnp.ndarray:
+    """Project volume (nz, ny, nx) into (k, nh, nw) projections.
+
+    ``proj_batch`` streams the views through in chunks of that many
+    rays per dispatch — parity with the back-projector's view chunking,
+    so a solver's forward pass works the same bounded per-call set the
+    plan's ``proj_batch`` promises (one chunk's ray grid + march
+    temporaries instead of all views at once). ``None`` keeps a single
+    all-views dispatch. ``views`` selects a subset of view indices (a
+    slice or an index sequence) — the ordered-subset forward pass; the
+    default projects the full scan. Either way rows come back in the
+    requested view order.
+    """
+    vol_origin, inv_pitch, step_len, t_near, n_steps = march_params(
+        geom, oversample)
+    srcs, origins, usteps, vsteps = view_frames(geom)
+    idx = np.arange(geom.n_proj)[views] if views is not None \
+        else np.arange(geom.n_proj)
+    k = len(idx)
+    if k == 0:
+        return jnp.zeros((0, geom.nh, geom.nw), jnp.float32)
+    chunk = k if proj_batch is None else max(1, min(int(proj_batch), k))
+    out = []
+    for c0 in range(0, k, chunk):
+        sel = idx[c0:c0 + chunk]
+        pad = chunk - len(sel) if (c0 + chunk > k and len(out) > 0) else 0
+        if pad:   # tail rides the same-size program; extra rows dropped
+            sel = np.concatenate([sel, np.repeat(sel[-1:], pad)])
+        part = _project_views(
+            vol_zyx, jnp.asarray(srcs[sel]), jnp.asarray(origins[sel]),
+            jnp.asarray(usteps[sel]), jnp.asarray(vsteps[sel]),
             vol_origin, inv_pitch, n_steps, geom.nh, geom.nw,
-            jnp.float32(step_len), jnp.float32(t_near),
-        )
-        views.append(view)
-    return jnp.stack(views)
+            jnp.float32(step_len), jnp.float32(t_near))
+        out.append(part[:chunk - pad] if pad else part)
+    return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)

@@ -9,4 +9,5 @@ from .engine import TiledReconstructor  # noqa: F401
 from .planner import FleetSchedule, StreamSchedule, \
     partition_steps  # noqa: F401
 from .service import ReconService, ServiceStats, StreamSession  # noqa: F401
+from .solvers import IterativeExecutor, SolveReport, solve  # noqa: F401
 from .straggler import FleetStragglerBoard, StragglerMonitor  # noqa: F401

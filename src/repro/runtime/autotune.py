@@ -188,6 +188,15 @@ class TunedConfig:
     # reassociates a lane's reductions), so it is searched even in
     # exact mode; wall_us under max_batch > 1 is AMORTIZED per request.
     max_batch: int = 1
+    # numeric-precision data path: "f32" | "bf16" (bf16 samples with
+    # f32 accumulators — a tolerance-contract knob like ``variant``,
+    # searched only in the wide space). Pre-existing cache entries lack
+    # the field -> dataclass default "f32".
+    precision: str = "f32"
+    # iterative-solver family ("none" = plain FDK). Solver winners are
+    # measured on AMORTIZED per-iteration wall (see _measure_solver)
+    # and live under their own request keys (solver is in bucket_key).
+    solver: str = "none"
     wall_us: float = 0.0
     baseline_us: float = 0.0
     source: str = "heuristic"           # "measured" | "cache" | "heuristic"
@@ -206,7 +215,7 @@ class TunedConfig:
         return (self.variant, self.schedule, self.pipeline,
                 self.pipeline_depth, self.tile_shape, self.proj_batch,
                 self.nb, self.out, self.interpret, self.options,
-                self.max_batch)
+                self.max_batch, self.precision, self.solver)
 
     @property
     def speedup(self) -> float:
@@ -220,7 +229,8 @@ class TunedConfig:
             geom, self.variant, tile_shape=self.tile_shape, nb=self.nb,
             proj_batch=self.proj_batch, out=self.out,
             interpret=self.interpret, schedule=self.schedule,
-            request_batch=self.max_batch, **dict(self.options))
+            request_batch=self.max_batch, precision=self.precision,
+            solver=self.solver, **dict(self.options))
 
     def to_json(self) -> Dict:
         doc = dataclasses.asdict(self)
@@ -253,7 +263,8 @@ def config_from_plan(plan, *, pipeline: str = "sync",
         proj_batch=(plan.chunk_size if plan.streams_projections else None),
         nb=plan.nb, out=plan.out, interpret=plan.interpret,
         options=plan.options, source=source,
-        max_batch=int(plan.request_batch))
+        max_batch=int(plan.request_batch), precision=plan.precision,
+        solver=plan.solver)
 
 
 # --------------------------------------------------------------------------
@@ -464,7 +475,8 @@ def _request_key(variant, base_plan, kernel_options: Dict) -> str:
 
 def _heuristic_config(geom, variant="auto", *, nb=8, interpret=True,
                       tiling=None, memory_budget=None, proj_batch=None,
-                      out=None, schedule=None, **kernel_options):
+                      out=None, schedule=None, precision="f32",
+                      solver="none", **kernel_options):
     """(heuristic TunedConfig, its base plan) for one façade request —
     exactly what every entry point runs today without tuning."""
     from repro.core.fdk import _build_plan
@@ -472,6 +484,7 @@ def _heuristic_config(geom, variant="auto", *, nb=8, interpret=True,
     plan = _build_plan(geom, name, nb=nb, interpret=interpret,
                        tiling=tiling, memory_budget=memory_budget,
                        proj_batch=proj_batch, out=out, schedule=schedule,
+                       precision=precision, solver=solver,
                        **_base_kernel_options(variant, kernel_options))
     return config_from_plan(plan), plan
 
@@ -488,7 +501,8 @@ def resolve_config(geom, variant: str = "auto", *, cache=None,
     base_cfg, base_plan = _heuristic_config(geom, variant, **request)
     extra = {k: v for k, v in request.items()
              if k not in ("nb", "interpret", "tiling", "memory_budget",
-                          "proj_batch", "out", "schedule")}
+                          "proj_batch", "out", "schedule", "precision",
+                          "solver")}
     hit = cache.lookup(fingerprint_key(),
                        _request_key(variant, base_plan, extra))
     if hit is not None:
@@ -499,7 +513,7 @@ def resolve_config(geom, variant: str = "auto", *, cache=None,
 def resolve_plan(geom, *, variant="auto", tuning=None, tile_shape=None,
                  memory_budget=None, nb=8, proj_batch=None, out="host",
                  interpret=True, schedule=None, request_batch=1,
-                 **kernel_options):
+                 precision="f32", solver="none", **kernel_options):
     """Planner-level twin of :func:`resolve_config` (planner argument
     conventions; returns the plan only — the executor-level pipeline
     choice needs :func:`resolve_config`). This is what
@@ -515,6 +529,7 @@ def resolve_plan(geom, *, variant="auto", tuning=None, tile_shape=None,
         geom, name, tile_shape=tile_shape, memory_budget=memory_budget,
         nb=nb, proj_batch=proj_batch, out=out, interpret=interpret,
         schedule=schedule, request_batch=request_batch,
+        precision=precision, solver=solver,
         **_base_kernel_options(variant, kernel_options))
     hit = cache.lookup(fingerprint_key(),
                        _request_key(variant, base, kernel_options))
@@ -566,6 +581,38 @@ def _measure_config(geom, config: TunedConfig, projections,
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2] / rb
+
+
+def _measure_solver(geom, config: TunedConfig, projections,
+                    program_cache, *, iters_per_solve: int = 3,
+                    warmup: int = 1) -> float:
+    """Median AMORTIZED wall seconds per solver ITERATION under
+    ``config`` (``config.solver`` names the method).
+
+    Compiles + normalizers are paid via ``IterativeExecutor.warm``
+    before the timed region — the quantity a deployment cares about is
+    the warm per-iteration cost the whole solve multiplies, not the
+    one-time setup. Each timed sample runs a short
+    ``iters_per_solve``-iteration solve and bills wall /
+    iters_per_solve, so loop overhead amortizes the same way a real
+    N-iteration run amortizes it.
+    """
+    import jax
+    from repro.runtime.solvers import IterativeExecutor
+    ex = IterativeExecutor(geom, config.build_plan(geom),
+                           cache=program_cache)
+    ex.warm()
+    k = max(1, int(iters_per_solve))
+    run = lambda: ex.solve(projections, n_iters=k)[0]  # noqa: E731
+    for _ in range(int(warmup)):
+        jax.block_until_ready(run())
+    times = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] / k
 
 
 # --------------------------------------------------------------------------
@@ -696,6 +743,14 @@ def _batch_axis(cur: TunedConfig) -> List[TunedConfig]:
             for rb in (1, 2, 4, 8) if rb != cur.max_batch]
 
 
+def _precision_axis(cur: TunedConfig) -> List[TunedConfig]:
+    """Flip the reduced-precision data path (bf16 samples / f32
+    accumulators). A tolerance-contract knob like ``variant`` — only
+    offered in the wide (non-exact) search."""
+    return [dataclasses.replace(cur, precision=p)
+            for p in ("f32", "bf16") if p != cur.precision]
+
+
 def _pipeline_axis(cur: TunedConfig) -> List[TunedConfig]:
     if cur.out != "host":
         return []    # the flush pipeline only exists for host placement
@@ -709,11 +764,12 @@ def _pipeline_axis(cur: TunedConfig) -> List[TunedConfig]:
 # The tuner
 # --------------------------------------------------------------------------
 
-def autotune(geom, variant: str = "auto", *, nb: int = 8,
+def autotune(geom, variant: str = "auto", *, method: str = "fdk",
+             nb: int = 8,
              interpret: bool = True, tiling=None,
              memory_budget: Optional[int] = None,
              proj_batch: Optional[int] = None, out: Optional[str] = None,
-             schedule: Optional[str] = None,
+             schedule: Optional[str] = None, precision: str = "f32",
              budget_s: float = 20.0, iters: int = 3, warmup: int = 1,
              exact: Optional[bool] = None,
              variants: Optional[Sequence[str]] = None,
@@ -744,6 +800,15 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
     shares compiled programs with the caller (e.g. the serving layer's
     cache, so tuning doubles as warmup).
 
+    ``method`` widens the tuner beyond FDK: a solver method ("sart" /
+    "os_sart" / "cgls" / "fista_tv") measures the AMORTIZED
+    per-iteration wall of a short warm solve (:func:`_measure_solver`)
+    and searches subset count (the ``proj_batch`` chunk axis — the
+    ordered-subset structure), ``precision`` ("f32"/"bf16"), and the
+    order-only ``schedule`` knob. Solver winners persist under their
+    own request keys (``solver`` sits in ``bucket_key``) and never
+    collide with FDK entries.
+
     The cache is SELF-MAINTAINING: a hit younger than ``revalidate_s``
     wall seconds resolves with zero measurement (the fast path above);
     an older hit pays ONE cheap heuristic-baseline probe. If the probe
@@ -759,11 +824,28 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
     import jax.numpy as jnp
     from repro.runtime.executor import ProgramCache
 
+    solver = "none" if method == "fdk" else method
+    if method not in ("fdk", "sart", "os_sart", "cgls", "fista_tv"):
+        raise ValueError(
+            f"method must be 'fdk' or a solver "
+            f"('sart'|'os_sart'|'cgls'|'fista_tv'), got {method!r}")
+
+    def _measure(cfg, projs, pc, *, m_iters, m_warmup):
+        # solver methods optimize the AMORTIZED per-iteration wall —
+        # the cost a real N-iteration deployment multiplies — instead
+        # of one-shot reconstruct wall
+        if solver == "none":
+            return _measure_config(geom, cfg, projs, pc, iters=m_iters,
+                                   warmup=m_warmup)
+        return _measure_solver(geom, cfg, projs, pc,
+                               iters_per_solve=m_iters, warmup=m_warmup)
+
     tcache = as_tuning_cache(cache)
     base_cfg, base_plan = _heuristic_config(
         geom, variant, nb=nb, interpret=interpret, tiling=tiling,
         memory_budget=memory_budget, proj_batch=proj_batch, out=out,
-        schedule=schedule, **kernel_options)
+        schedule=schedule, precision=precision, solver=solver,
+        **kernel_options)
     fp = fingerprint_key()
     rkey = _request_key(variant, base_plan, kernel_options)
     if not force:
@@ -782,9 +864,9 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
             if program_cache is None:
                 program_cache = ProgramCache()
             try:
-                probe_us = _measure_config(
-                    geom, base_cfg, projections, program_cache,
-                    iters=1, warmup=1) * 1e6
+                probe_us = _measure(
+                    base_cfg, projections, program_cache,
+                    m_iters=1, m_warmup=1) * 1e6
             except Exception:
                 probe_us = None     # unmeasurable probe: let the full
                                     # search below re-establish reality
@@ -803,7 +885,10 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
             # fall through to the full search (which re-stores)
 
     if exact is None:
-        exact = variant not in (None, "auto")
+        # solver tuning is inherently non-exact: subset count changes
+        # the ITERATION (OS-SART) and precision the data path, and both
+        # are the axes the search exists for
+        exact = variant not in (None, "auto") and solver == "none"
     if projections is None:
         rng = np.random.RandomState(0)
         projections = jnp.asarray(
@@ -815,22 +900,36 @@ def autotune(geom, variant: str = "auto", *, nb: int = 8,
 
     def timed(cfg: TunedConfig) -> float:
         if cfg.key not in measured:
-            measured[cfg.key] = _measure_config(
-                geom, cfg, projections, pcache, iters=iters, warmup=warmup)
+            measured[cfg.key] = _measure(cfg, projections, pcache,
+                                         m_iters=iters, m_warmup=warmup)
         return measured[cfg.key]
 
     best = base_cfg
     best_t = baseline_t = timed(base_cfg)
 
     axes = []
-    if not exact:
-        axes.append(lambda c: _variant_axis(c, variant, kernel_options))
-        axes.append(_option_axis)
-        axes.append(lambda c: _tile_axis(geom, c, memory_budget))
+    if solver != "none":
+        # subset count (the plan's projection chunking IS the ordered-
+        # subset structure) x precision x the order-only schedule knob;
+        # pipeline/batch axes do not apply (device-resident volume,
+        # stateful loop — no request batching, no host flush)
         axes.append(lambda c: _chunk_axis(geom, c, memory_budget))
-    axes.append(lambda c: _schedule_axis(c, memory_budget, pinned=schedule))
-    axes.append(_pipeline_axis)
-    axes.append(_batch_axis)
+        if not exact:
+            axes.append(_precision_axis)
+        axes.append(lambda c: _schedule_axis(c, memory_budget,
+                                             pinned=schedule))
+    else:
+        if not exact:
+            axes.append(lambda c: _variant_axis(c, variant,
+                                                kernel_options))
+            axes.append(_option_axis)
+            axes.append(lambda c: _tile_axis(geom, c, memory_budget))
+            axes.append(lambda c: _chunk_axis(geom, c, memory_budget))
+            axes.append(_precision_axis)
+        axes.append(lambda c: _schedule_axis(c, memory_budget,
+                                             pinned=schedule))
+        axes.append(_pipeline_axis)
+        axes.append(_batch_axis)
 
     for axis in axes:
         for cand in axis(best):

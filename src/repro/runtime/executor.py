@@ -85,6 +85,50 @@ from repro.runtime.straggler import FleetStragglerBoard
 # Compile: the keyed jit-program cache
 # --------------------------------------------------------------------------
 
+def _plan_dtype(plan: ReconPlan) -> str:
+    """ProgramCache dtype key of a plan's precision axis."""
+    return "bfloat16" if plan.precision == "bf16" else "float32"
+
+
+def _precision_adapter(variant: str, dtype: str):
+    """Input-side precision transform for one kernel program, or None.
+
+    ``dtype == "bfloat16"`` implements the plan-level ``precision=
+    "bf16"`` contract: projection samples are rounded to bfloat16 on
+    the way into the kernel (the reduced-precision data path — the
+    bytes every gather streams), while the per-view matrices, the
+    interpolation weights derived from them, and every accumulator stay
+    float32. Pure-JAX kernels receive the bf16 array directly (mixed
+    bf16xf32 arithmetic promotes to f32, so the multiply-accumulate
+    chain is f32 over bf16-rounded samples); Pallas kernels receive the
+    bf16-rounded values upcast back to f32 — identical rounding, but
+    the kernel's refs keep the dtype its block specs declare. Either
+    way the program's OUTPUT is float32 (the builders re-assert it), so
+    downstream accumulation never narrows.
+    """
+    if str(dtype) == "float32":
+        return None
+    if str(dtype) != "bfloat16":
+        raise ValueError(
+            f"unsupported program dtype {dtype!r}: 'float32' or "
+            f"'bfloat16'")
+    if get_spec(variant).backend == "pallas":
+        return lambda img: img.astype(jnp.bfloat16).astype(jnp.float32)
+    return lambda img: img.astype(jnp.bfloat16)
+
+
+def _with_precision(fn, variant: str, dtype: str):
+    """Wrap a kernel fn with the precision adapter (f32 = pass-through)."""
+    cast = _precision_adapter(variant, dtype)
+    if cast is None:
+        return fn
+
+    def wrapped(img, mat, shape, **opts):
+        return fn(cast(img), mat, shape, **opts).astype(jnp.float32)
+
+    return wrapped
+
+
 class ProgramCache:
     """Keyed cache of jitted back-projection programs.
 
@@ -126,7 +170,7 @@ class ProgramCache:
             opts = spec.resolve_options(
                 {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
             shape = tuple(call_shape)
-            fn = spec.fn
+            fn = _with_precision(spec.fn, variant, dtype)
             prog = lambda img, mat: fn(img, mat, shape, **opts)  # noqa: E731
             # non-jittable kernels (KernelSpec.jittable=False) inspect
             # concrete values at trace time; cache them un-wrapped
@@ -158,7 +202,7 @@ class ProgramCache:
             opts = spec.resolve_options(
                 {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
             shape = tuple(call_shape)
-            fn = spec.fn
+            fn = _with_precision(spec.fn, variant, dtype)
             one = lambda img, mat: fn(img, mat, shape, **opts)  # noqa: E731
             if spec.jittable:
                 return jax.jit(jax.vmap(one, in_axes=(0, None)))
@@ -190,7 +234,7 @@ class ProgramCache:
             opts = spec.resolve_options(
                 {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
             shape = tuple(call_shape)
-            fn = spec.fn
+            fn = _with_precision(spec.fn, variant, dtype)
             if spec.jittable:
                 def prog(img_s, mat_s):
                     def body(acc, xs):
@@ -245,7 +289,7 @@ class ProgramCache:
             opts = spec.resolve_options(
                 {**dict(options), "nb": int(nb), "interpret": bool(interpret)})
             shape = tuple(call_shape)
-            fn = spec.fn
+            fn = _with_precision(spec.fn, variant, dtype)
             if spec.jittable:
                 def one(img_s, mat_s):
                     def body(acc, xs):
@@ -637,8 +681,15 @@ class PlanExecutor:
                     "fleet execution accumulates per-device step "
                     "outputs into a host volume; plan with out='host', "
                     f"got {plan.out!r}")
+            if plan.precision != "f32":
+                raise ValueError(
+                    "fleet execution does not support the reduced-"
+                    "precision data path yet (the origin-traced fleet "
+                    "programs are f32-only); plan with precision='f32', "
+                    f"got {plan.precision!r}")
         self.geom = geom
         self.plan = plan
+        self._dtype = _plan_dtype(plan)
         self.cache = cache if cache is not None else default_program_cache()
         self.pipeline = pipeline
         self.pipeline_depth = int(pipeline_depth)
@@ -666,13 +717,13 @@ class PlanExecutor:
 
     def _program(self, variant: str, call_shape) -> Callable:
         return self.cache.program(variant, call_shape, self.plan.nb,
-                                  "float32", self.plan.interpret,
+                                  self._dtype, self.plan.interpret,
                                   self.plan.options)
 
     def _scan_program(self, variant: str, call_shape,
                       sched: StepMajorSchedule) -> Callable:
         return self.cache.scan_program(variant, call_shape, self.plan.nb,
-                                       "float32", self.plan.interpret,
+                                       self._dtype, self.plan.interpret,
                                        self.plan.options,
                                        n_chunks=sched.n_chunks,
                                        chunk_size=sched.chunk_size)
@@ -680,7 +731,7 @@ class PlanExecutor:
     def _fleet_program(self, variant: str, call_shape,
                        sched: StepMajorSchedule) -> Callable:
         return self.cache.fleet_program(variant, call_shape, self.plan.nb,
-                                        "float32", self.plan.interpret,
+                                        self._dtype, self.plan.interpret,
                                         self.plan.options,
                                         n_chunks=sched.n_chunks,
                                         chunk_size=sched.chunk_size)
@@ -688,14 +739,14 @@ class PlanExecutor:
     def _batch_scan_program(self, variant: str, call_shape,
                             sched: StepMajorSchedule, rb: int) -> Callable:
         return self.cache.batch_scan_program(
-            variant, call_shape, self.plan.nb, "float32",
+            variant, call_shape, self.plan.nb, self._dtype,
             self.plan.interpret, self.plan.options,
             n_chunks=sched.n_chunks, chunk_size=sched.chunk_size, rb=rb)
 
     def _batch_fleet_program(self, variant: str, call_shape,
                              sched: StepMajorSchedule, rb: int) -> Callable:
         return self.cache.batch_fleet_program(
-            variant, call_shape, self.plan.nb, "float32",
+            variant, call_shape, self.plan.nb, self._dtype,
             self.plan.interpret, self.plan.options,
             n_chunks=sched.n_chunks, chunk_size=sched.chunk_size, rb=rb)
 

@@ -303,6 +303,25 @@ class ReconPlan:
     # holds per-step accumulators alive across pushes, so it must not
     # share an executor bucket with offline one-shot requests.
     ingest: str = "offline"
+    # precision: "f32" (exact float32 everywhere) | "bf16" (reduced-
+    # precision data path: projection samples are rounded to bfloat16
+    # before entering a kernel — halving the streamed projection bytes,
+    # the Treibig/Hofmann locality lever — while interpolation weights
+    # and every accumulator stay float32). A numeric knob with the same
+    # exactness-tolerance contract as variant="auto": parity with f32
+    # holds at tolerance, never bit level. Part of bucket_key — bf16
+    # and f32 traffic compile distinct program families and must not
+    # share a bucket.
+    precision: str = "f32"
+    # solver: "none" (a single back-projection / FDK pass — every
+    # pre-PR-9 plan) | "sart" | "os_sart" | "cgls" | "fista_tv" (the
+    # plan drives runtime.solvers.IterativeExecutor's plan-level
+    # iteration loop). Part of bucket_key: solver buckets hold forward-
+    # projection programs and normalizer volumes alive across requests,
+    # so they must not share an executor bucket with one-shot FDK
+    # traffic. For "os_sart" the projection-chunk schedule doubles as
+    # the ordered-subset partition (chunk c == subset c).
+    solver: str = "none"
 
     # ---- derived schedules / introspection --------------------------------
 
@@ -338,6 +357,21 @@ class ReconPlan:
             folds=tuple(ChunkFold(w, self.steps) for w in work))
 
     @property
+    def subsets(self) -> Tuple[Tuple[int, int], ...]:
+        """Ordered-subset view ranges: the projection-chunk schedule
+        clipped to the REAL view count (the chunk grid's zero-image nb
+        padding carries no data and is never a subset member). This is
+        the partition OS-SART sweeps — one subset per chunk, so the
+        tuner's existing ``proj_batch`` axis IS the subset-count axis.
+        """
+        out = []
+        for s0, s1 in self.chunks:
+            if s0 >= self.n_proj:
+                break
+            out.append((s0, min(s1, self.n_proj)))
+        return tuple(out)
+
+    @property
     def program_keys(self) -> Tuple[Tuple[str, Tuple[int, int, int]], ...]:
         """Distinct (variant, call_shape) pairs — the compile workload.
 
@@ -366,7 +400,7 @@ class ReconPlan:
         return (self.vol_shape_xyz, self.det_shape_wh, self.variant,
                 self.tile_shape, self.nb, self.n_proj, self.n_proj_padded,
                 self.chunk_size, self.out, self.interpret, self.options,
-                self.schedule, self.ingest)
+                self.schedule, self.ingest, self.precision, self.solver)
 
     @property
     def working_set_bytes(self) -> int:
@@ -455,6 +489,8 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
                         schedule: Optional[str] = None,
                         request_batch: int = 1,
                         ingest: str = "offline",
+                        precision: str = "f32",
+                        solver: str = "none",
                         tuning=None,
                         **kernel_options) -> ReconPlan:
     """Build the :class:`ReconPlan` every entry point executes.
@@ -497,6 +533,18 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         accumulators + projection stacks must fit together) and the
         explicit-tile validation bills the rb-scaled working set, so
         the byte contract stays honest under batching.
+    precision : "f32" (default — exact float32) | "bf16" (reduced-
+        precision data path: bf16-rounded projection samples, f32
+        interpolation weights + accumulators — see
+        :attr:`ReconPlan.precision`). A numeric knob: output parity
+        with f32 is at tolerance, like ``variant="auto"``.
+    solver : "none" (default — one back-projection pass) | "sart" |
+        "os_sart" | "cgls" | "fista_tv": marks the plan as the engine
+        of an iterative loop (``runtime.solvers.IterativeExecutor``).
+        Solver plans accumulate on device (the volume feeds the next
+        forward projection), so ``out`` must stay "device"; for
+        "os_sart" the chunk schedule is also the ordered-subset
+        partition (:attr:`ReconPlan.subsets`).
     tuning : opt-in to the measured autotuner's persisted winners
         (``runtime.autotune``): a ``TuningCache``, a cache-file path,
         or None. With ``variant="auto"`` (or any non-None ``tuning``)
@@ -527,8 +575,30 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
             geom, variant=variant, tuning=tuning, tile_shape=tile_shape,
             memory_budget=memory_budget, nb=nb, proj_batch=proj_batch,
             out=out, interpret=interpret, schedule=schedule,
-            request_batch=request_batch, **kernel_options)
+            request_batch=request_batch, precision=precision,
+            solver=solver, **kernel_options)
     spec = get_spec(variant)
+    if precision not in ("f32", "bf16"):
+        raise ValueError(
+            f"precision must be 'f32' or 'bf16', got {precision!r}")
+    if solver not in ("none", "sart", "os_sart", "cgls", "fista_tv"):
+        raise ValueError(
+            f"solver must be 'none', 'sart', 'os_sart', 'cgls' or "
+            f"'fista_tv', got {solver!r}")
+    if solver != "none":
+        if out not in (None, "device"):
+            raise ValueError(
+                "solver plans accumulate on device (the volume feeds "
+                "the next forward projection every iteration; host "
+                "staging would add two full-volume round-trips per "
+                f"sweep) — out must be 'device', got {out!r}")
+        out = "device"
+        if ingest == "stream":
+            raise ValueError(
+                "solver plans iterate over the COMPLETE projection set "
+                "(every sweep revisits all views); ingest='stream' "
+                "cannot compose with them — reconstruct online with "
+                "solver='none' or wait for the scan to finish")
     request_batch = int(request_batch)
     if request_batch < 1:
         raise ValueError(
@@ -591,7 +661,8 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
         n_proj=n_proj, n_proj_padded=n_pad, chunk_size=chunk,
         out=out, interpret=interpret, steps=steps,
         options=tuple(sorted(spec.resolve_options(kernel_options).items())),
-        schedule=schedule, request_batch=request_batch, ingest=ingest)
+        schedule=schedule, request_batch=request_batch, ingest=ingest,
+        precision=precision, solver=solver)
 
     if tile_given and memory_budget is not None and \
             plan.working_set_bytes > int(memory_budget):

@@ -304,6 +304,9 @@ class _Request:
     key: tuple
     deadline_s: Optional[float] = None
     priority: int = 0
+    # iterative-request knobs (n_iters/relax/...), forwarded to the
+    # bucket's IterativeExecutor; None for plain FDK requests
+    solver_kw: Optional[Dict] = None
 
 
 @dataclasses.dataclass
@@ -651,6 +654,12 @@ class ReconService:
         opts = dict(options)
         variant = opts.pop("variant", None)
         tuning = opts.pop("tuning", None)
+        solver = opts.pop("solver", "none")
+        precision = opts.pop("precision", "f32")
+        # per-request loop knobs ride the request, not the bucket
+        solver_kw = {k: opts.pop(k) for k in
+                     ("n_iters", "relax", "x0", "tv_weight", "tv_inner",
+                      "oversample") if k in opts}
         if tuning is None:
             # ONE read (under the lock warmup(tune=True) writes under):
             # both decisions below must see the same store, or a
@@ -668,7 +677,23 @@ class ReconService:
             tiling=opts.pop("tiling", None),
             memory_budget=opts.pop("memory_budget", None),
             proj_batch=opts.pop("proj_batch", None),
-            out=opts.pop("out", None), schedule=opts.pop("schedule", None))
+            out=opts.pop("out", None), schedule=opts.pop("schedule", None),
+            precision=precision)
+        if solver != "none":
+            # solver buckets: the loop owns a device-resident volume
+            # and pairs FP with BP — no fleet sharding, and tuned
+            # resolution is method-aware (autotune(method=...)), not
+            # the FDK lookup, so requests resolve heuristically here
+            if self.fleet is not None:
+                raise ValueError(
+                    "iterative solver requests run single-device (the "
+                    "solve loop owns the volume); they cannot ride a "
+                    "fleet service (ReconService(devices=...))")
+            if variant == "auto":
+                variant = "algorithm1_mp"
+            tuning = None
+            kw["solver"] = solver
+            kw["out"] = "device"
         ingest = opts.pop("ingest", "offline")
         if ingest != "offline":
             # stream plans resolve heuristically (TunedConfig carries no
@@ -686,13 +711,19 @@ class ReconService:
             # contrary choices fail fast in PlanExecutor's validation)
             kw["out"] = kw["out"] or "host"
             kw["schedule"] = kw["schedule"] or "step"
+        if solver == "none" and solver_kw:
+            raise ValueError(
+                f"solver knobs {sorted(solver_kw)} need an iterative "
+                f"request (pass solver='sart'|'os_sart'|'cgls'|"
+                f"'fista_tv')")
         if variant == "auto" or tuning is not None:
             from repro.runtime.autotune import resolve_config
             cfg = resolve_config(geom, variant,
                                  cache=self._tuning_cache(tuning),
                                  **kw, **opts)
-            return cfg.build_plan(geom), cfg
-        return _build_plan(geom, variant, **kw, **opts), None
+            return cfg.build_plan(geom), cfg, None
+        return (_build_plan(geom, variant, **kw, **opts), None,
+                solver_kw or None)
 
     @staticmethod
     def _source_of(config) -> str:
@@ -741,11 +772,20 @@ class ReconService:
                 return bucket
             misses_before = self.cache.stats()["misses"]
             tuned = config is not None and config.source != "heuristic"
-            ex = PlanExecutor(
-                geom, plan, cache=self.cache,
-                pipeline=config.pipeline if tuned else self.pipeline,
-                pipeline_depth=(config.pipeline_depth if tuned else 2),
-                tuned=config if tuned else None, fleet=self.fleet)
+            if plan.solver != "none":
+                # iterative bucket: the persistent FP+BP pairing, warm
+                # like any other bucket (normalizers + every program a
+                # solve needs compile HERE, attributed to this bucket;
+                # warm requests then iterate without compiling)
+                from .solvers import IterativeExecutor
+                ex = IterativeExecutor(geom, plan, self.cache,
+                                       pipeline=self.pipeline)
+            else:
+                ex = PlanExecutor(
+                    geom, plan, cache=self.cache,
+                    pipeline=config.pipeline if tuned else self.pipeline,
+                    pipeline_depth=(config.pipeline_depth if tuned else 2),
+                    tuned=config if tuned else None, fleet=self.fleet)
             ex.warm()
             cap = self._effective_cap(config)
             if cap > 1 and ex.supports_request_batching:
@@ -792,7 +832,7 @@ class ReconService:
                                program_cache=self.cache, **opts)
                 self._bucket(geom, cfg.build_plan(geom), config=cfg)
             else:
-                plan, cfg = self._plan(geom, options)
+                plan, cfg, _skw = self._plan(geom, options)
                 self._bucket(geom, plan, config=cfg)
         return self.stats()
 
@@ -811,7 +851,8 @@ class ReconService:
         peers, and ``priority > 0`` marks it latency-critical (any
         batch it joins dispatches immediately). Both are no-ops when
         batching is off (``max_batch == 1``)."""
-        plan, config = self._plan(geom, options)   # validate in the caller
+        plan, config, solver_kw = self._plan(geom, options)
+        # (validation above happens in the submitting thread)
         if deadline_ms is not None and deadline_ms < 0:
             raise ValueError(
                 f"deadline_ms must be >= 0, got {deadline_ms}")
@@ -821,7 +862,7 @@ class ReconService:
             config=config, key=(geom, plan.bucket_key),
             deadline_s=(None if deadline_ms is None
                         else time.perf_counter() + deadline_ms / 1e3),
-            priority=int(priority))
+            priority=int(priority), solver_kw=solver_kw)
         # put() checks closed under the former's condition, so a
         # request either raises here or is guaranteed a consumer
         # (workers drain the queue to empty before honoring close)
@@ -852,16 +893,18 @@ class ReconService:
                 t0 = time.perf_counter()
                 if k == 1:
                     results = [bucket.executor.reconstruct(
-                        head.projections)]
+                        head.projections, **(head.solver_kw or {}))]
                 elif bucket.executor.supports_request_batching:
                     # ONE dispatch stream serves all k lanes —
                     # bit-identical per lane to the k==1 path
                     results = bucket.executor.execute_batch(
                         [r.projections for r in live])
                 else:
-                    # chunk-major buckets can't batch: the formed
-                    # group still runs back-to-back on one worker
-                    results = [bucket.executor.reconstruct(r.projections)
+                    # chunk-major and solver buckets can't batch: the
+                    # formed group still runs back-to-back on one
+                    # worker (each solve keeps its own request knobs)
+                    results = [bucket.executor.reconstruct(
+                        r.projections, **(r.solver_kw or {}))
                                for r in live]
                 wall = time.perf_counter() - t0
                 # streamed accounting: every member's service time IS
@@ -916,7 +959,7 @@ class ReconService:
             # (bounded below by nb so the planner's rounding is a no-op)
             opts["proj_batch"] = max(int(opts.get("nb", 8)),
                                      geom.n_proj // 8)
-        plan, config = self._plan(geom, opts)
+        plan, config, _skw = self._plan(geom, opts)
         bucket = self._bucket(geom, plan, config=config)
         self._ensure_stream_worker()
         with self._lock:
@@ -994,8 +1037,9 @@ class ReconService:
             mat_c = pairs[0][1]        # same geometry -> same matrices
             for i, step in enumerate(plan.steps):
                 prog = self.cache.batch_program(
-                    step.variant, step.call_shape, plan.nb, "float32",
-                    plan.interpret, plan.options, rb=len(cores))
+                    step.variant, step.call_shape, plan.nb,
+                    ex._dtype, plan.interpret, plan.options,
+                    rb=len(cores))
                 out_b = prog(img_b, ex._translated(mat_c, step))
                 for r, core in enumerate(cores):
                     core.accept_part(i, out_b[r])

@@ -407,7 +407,7 @@ def test_service_estimate_none_until_traffic(setup):
     geom, reqs = setup
     svc = ReconService(max_inflight=1, cache=ProgramCache())
     try:
-        plan, cfg = svc._plan(geom, dict(OPTS))
+        plan, cfg, _skw = svc._plan(geom, dict(OPTS))
         probe = _Request(fut=Future(), projections=None, geom=geom,
                          plan=plan, config=cfg, key=(geom, plan.bucket_key))
         assert svc._run_estimate(probe) is None      # cold start

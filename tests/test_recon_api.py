@@ -1,0 +1,162 @@
+"""The unified entry point: ``repro.reconstruct`` + ``ReconOptions``
+and the legacy-kwarg deprecation shim."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro
+from repro.api import ITERATIVE_METHODS, ReconOptions, _coerce_options
+from repro.core.forward import forward_project
+from repro.core.geometry import standard_geometry
+from repro.core.phantom import shepp_logan_3d
+from repro.runtime.executor import ProgramCache
+
+
+@pytest.fixture(scope="module")
+def api_setup():
+    n = 16
+    geom = standard_geometry(n=n, n_det=24, n_proj=8)
+    phantom = jnp.asarray(shepp_logan_3d(n))
+    projs = forward_project(phantom, geom, oversample=1.0)
+    return geom, phantom, projs
+
+
+# ---------------------------------------------------------------------------
+# ReconOptions record
+
+
+def test_options_frozen_hashable_normalized():
+    o = ReconOptions(nb=4, kernel_options={"b": 2, "a": 1})
+    assert o.kernel_options == (("a", 1), ("b", 2))   # dict → sorted tuple
+    assert o.kernel_options_dict() == {"a": 1, "b": 2}
+    assert hash(o) == hash(ReconOptions(nb=4, kernel_options=[("a", 1),
+                                                              ("b", 2)]))
+    with pytest.raises(Exception):
+        o.nb = 8                                      # frozen
+    assert ReconOptions() == ReconOptions()
+
+
+def test_coerce_override_wins_silently():
+    """A legacy kwarg against a DEFAULT field is silent — that's every
+    historical call site."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        o = _coerce_options(None, {"nb": 4, "interpret": True}, "t")
+    assert o.nb == 4
+
+
+def test_coerce_conflict_warns_and_kwarg_wins():
+    base = ReconOptions(nb=2)
+    with pytest.warns(DeprecationWarning, match="nb=4 conflicts"):
+        o = _coerce_options(base, {"nb": 4}, "t")
+    assert o.nb == 4
+    # same value twice is not a conflict
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert _coerce_options(base, {"nb": 2}, "t").nb == 2
+
+
+def test_coerce_unknown_keys_become_kernel_options():
+    base = ReconOptions(kernel_options={"keep": 1})
+    o = _coerce_options(base, {"unroll": 2, "nb": 4}, "t")
+    assert o.nb == 4
+    assert o.kernel_options_dict() == {"keep": 1, "unroll": 2}
+
+
+def test_coerce_rejects_non_options():
+    with pytest.raises(TypeError):
+        _coerce_options({"nb": 4}, {}, "t")
+
+
+# ---------------------------------------------------------------------------
+# reconstruct() drives all five methods
+
+
+def test_reconstruct_fdk(api_setup):
+    geom, _, projs = api_setup
+    v_new = repro.reconstruct(projs, geom, options=ReconOptions(nb=4))
+    v_old = repro.fdk_reconstruct(projs, geom, nb=4)
+    assert np.allclose(np.asarray(v_new), np.asarray(v_old))
+
+
+@pytest.mark.parametrize("method", ITERATIVE_METHODS)
+def test_reconstruct_iterative_methods(api_setup, method):
+    geom, phantom, projs = api_setup
+    opts = ReconOptions(nb=4, n_iters=2, oversample=1.0, proj_batch=4)
+    vol = repro.reconstruct(projs, geom, method, options=opts)
+    assert vol.shape == phantom.shape
+    assert np.isfinite(np.asarray(vol)).all()
+    # the two-iteration estimate is already correlated with the truth
+    v = np.asarray(vol).ravel()
+    p = np.asarray(phantom).ravel()
+    corr = np.corrcoef(v, p)[0, 1]
+    assert corr > 0.4, (method, corr)
+
+
+def test_reconstruct_rejects_unknown_method(api_setup):
+    geom, _, projs = api_setup
+    with pytest.raises(ValueError, match="method"):
+        repro.reconstruct(projs, geom, "mlem")
+
+
+def test_reconstruct_iterative_rejects_devices(api_setup):
+    geom, _, projs = api_setup
+    with pytest.raises(ValueError, match="single-device"):
+        repro.reconstruct(projs, geom, "sart",
+                          options=ReconOptions(devices=2))
+
+
+def test_reconstruct_legacy_kwargs(api_setup):
+    """No options object at all — pure legacy spelling, no warning."""
+    geom, _, projs = api_setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        vol = repro.reconstruct(projs, geom, "sart", n_iters=1, nb=4,
+                                oversample=1.0)
+    assert vol.shape == (16, 16, 16)
+
+
+def test_reconstruct_precision_kwarg(api_setup):
+    geom, _, projs = api_setup
+    v32 = repro.reconstruct(projs, geom, "sart", n_iters=1, nb=4,
+                            oversample=1.0)
+    v16 = repro.reconstruct(projs, geom, "sart", n_iters=1, nb=4,
+                            oversample=1.0, precision="bf16")
+    d = float(jnp.abs(v32 - v16).max())
+    assert 0.0 < d < 0.05 * max(float(jnp.abs(v32).max()), 1e-12) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# service routing through the unified API
+
+
+def test_reconstruct_via_service(api_setup):
+    from repro.runtime.service import ReconService
+    geom, _, projs = api_setup
+    with ReconService() as svc:
+        opts = ReconOptions(nb=4, n_iters=2, oversample=1.0, service=svc)
+        v1 = repro.reconstruct(projs, geom, "sart", options=opts)
+        v2 = repro.reconstruct(projs, geom, "sart", options=opts)
+        assert np.allclose(np.asarray(v1), np.asarray(v2))
+        vf = repro.reconstruct(projs, geom, "fdk",
+                               options=ReconOptions(nb=4, service=svc))
+        assert vf.shape == v1.shape
+        assert len(svc.stats().buckets) == 2
+        # solver knobs without solver= must be rejected service-side
+        with pytest.raises(ValueError):
+            svc.reconstruct(projs, geom, n_iters=2)
+
+
+def test_lazy_package_exports():
+    assert repro.ReconOptions is ReconOptions
+    assert callable(repro.reconstruct)
+    assert callable(repro.solve)
+    assert callable(repro.forward_project)
+    assert repro.SolveReport.__name__ == "SolveReport"
+    assert repro.IterativeExecutor.__name__ == "IterativeExecutor"
+    with pytest.raises(AttributeError):
+        repro.not_a_symbol

@@ -1,0 +1,282 @@
+"""Iterative solver subsystem (runtime/solvers.py): convergence,
+precision contract, and the compile-flat-after-iteration-1 guarantee."""
+
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.forward import forward_project
+from repro.core.geometry import standard_geometry
+from repro.core.phantom import shepp_logan_3d
+from repro.runtime.executor import ProgramCache
+from repro.runtime.planner import plan_reconstruction
+from repro.runtime.solvers import (IterativeExecutor, solve,
+                                   solver_executor)
+
+
+@pytest.fixture(scope="module")
+def solver_setup():
+    n = 16
+    geom = standard_geometry(n=n, n_det=24, n_proj=12)
+    phantom = jnp.asarray(shepp_logan_3d(n))
+    projs = forward_project(phantom, geom, oversample=1.0)
+    return geom, phantom, projs
+
+
+def _psnr(x, ref):
+    x = np.asarray(x, np.float64)
+    ref = np.asarray(ref, np.float64)
+    mse = np.mean((x - ref) ** 2)
+    peak = ref.max() - ref.min()
+    return 10.0 * math.log10(peak * peak / max(mse, 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# convergence
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("sart", {}),
+    ("os_sart", {"proj_batch": 4}),
+    ("cgls", {}),
+])
+def test_monotone_residual(solver_setup, method, kw):
+    """SART / OS-SART / CGLS drive the data residual down every
+    iteration on consistent Shepp-Logan data."""
+    geom, _, projs = solver_setup
+    _, rep = solve(projs, geom, method, n_iters=5, oversample=1.0,
+                   nb=4, cache=ProgramCache(), **kw)
+    assert len(rep.residuals) == 5
+    for a, b in zip(rep.residuals, rep.residuals[1:]):
+        assert b < a * 1.001, rep.residuals   # monotone (tiny tolerance)
+    assert rep.residuals[-1] < 0.5 * rep.residuals[0]
+
+
+def test_os_sart_converges_faster_per_pass(solver_setup):
+    """Ordered subsets: one pass applies an update per subset, so the
+    residual after k passes is below plain SART's after k iterations."""
+    geom, _, projs = solver_setup
+    _, sart = solve(projs, geom, "sart", n_iters=4, oversample=1.0,
+                    nb=4, cache=ProgramCache())
+    _, ossart = solve(projs, geom, "os_sart", n_iters=4, oversample=1.0,
+                      nb=4, proj_batch=4, cache=ProgramCache())
+    assert ossart.residuals[-1] < sart.residuals[-1]
+    assert ossart.extras["subsets"] == 3.0      # 12 views / 4
+
+
+def test_fista_tv_beats_sart_psnr_sparse_view(solver_setup):
+    """With few views + noise, the TV prior wins reconstruction quality
+    at equal iteration count."""
+    n = 16
+    geom = standard_geometry(n=n, n_det=24, n_proj=8)   # sparse views
+    phantom = jnp.asarray(shepp_logan_3d(n))
+    projs = forward_project(phantom, geom, oversample=1.0)
+    rng = np.random.RandomState(7)
+    noisy = projs + jnp.asarray(
+        (0.02 * float(jnp.abs(projs).max())
+         * rng.randn(*projs.shape)).astype(np.float32))
+    vol_sart, _ = solve(noisy, geom, "sart", n_iters=8, oversample=1.0,
+                        nb=4, cache=ProgramCache())
+    vol_tv, _ = solve(noisy, geom, "fista_tv", n_iters=8, oversample=1.0,
+                      nb=4, tv_weight=0.01, cache=ProgramCache())
+    assert _psnr(vol_tv, phantom) > _psnr(vol_sart, phantom)
+
+
+# ---------------------------------------------------------------------------
+# precision contract
+
+
+def test_bf16_within_tolerance_of_f32(solver_setup):
+    """bf16 compute / f32 accumulate tracks the f32 solve within the
+    reduced-precision tolerance contract."""
+    geom, _, projs = solver_setup
+    x32, r32 = solve(projs, geom, "sart", n_iters=3, oversample=1.0,
+                     nb=4, precision="f32", cache=ProgramCache())
+    x16, r16 = solve(projs, geom, "sart", n_iters=3, oversample=1.0,
+                     nb=4, precision="bf16", cache=ProgramCache())
+    assert r16.precision == "bf16"
+    scale = float(jnp.abs(x32).max())
+    rel = float(jnp.sqrt(jnp.mean((x16 - x32) ** 2))) / max(scale, 1e-12)
+    assert rel < 2e-2, rel
+    # and the bf16 residual trajectory still falls monotonically
+    for a, b in zip(r16.residuals, r16.residuals[1:]):
+        assert b < a * 1.001
+
+
+def test_bf16_is_not_f32(solver_setup):
+    """The reduced-precision path must actually reduce precision
+    (guards against the adapter silently being a no-op)."""
+    geom, _, projs = solver_setup
+    x32, _ = solve(projs, geom, "sart", n_iters=2, oversample=1.0,
+                   nb=4, precision="f32", cache=ProgramCache())
+    x16, _ = solve(projs, geom, "sart", n_iters=2, oversample=1.0,
+                   nb=4, precision="bf16", cache=ProgramCache())
+    assert float(jnp.abs(x16 - x32).max()) > 0.0
+
+
+def test_precision_in_bucket_key(solver_setup):
+    geom, _, _ = solver_setup
+    a = plan_reconstruction(geom, "algorithm1_mp", out="device")
+    b = plan_reconstruction(geom, "algorithm1_mp", out="device",
+                            precision="bf16")
+    c = plan_reconstruction(geom, "algorithm1_mp", out="device",
+                            solver="sart")
+    assert a.bucket_key != b.bucket_key
+    assert a.bucket_key != c.bucket_key
+    with pytest.raises(ValueError):
+        plan_reconstruction(geom, "algorithm1_mp", out="device",
+                            precision="f64")
+
+
+# ---------------------------------------------------------------------------
+# compile accounting: warm iterations compile NOTHING
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("sart", {}),
+    ("os_sart", {"proj_batch": 4}),
+    ("cgls", {}),
+    ("fista_tv", {}),
+])
+def test_compile_flat_after_iter1(solver_setup, method, kw):
+    """Every program a solve needs compiles in iteration 1 (normalizers
+    included); iterations 2..N dispatch warm. Asserted per solver on
+    the shared ProgramCache miss count."""
+    geom, _, projs = solver_setup
+    cache = ProgramCache()
+    _, rep = solve(projs, geom, method, n_iters=4, oversample=1.0,
+                   nb=4, cache=cache, **kw)
+    assert rep.compiles_iter1 > 0
+    assert rep.compiles_warm == 0, (method, rep)
+    # a SECOND solve on the persistent executor compiles nothing at all
+    m0 = cache.stats()["misses"]
+    _, rep2 = solve(projs, geom, method, n_iters=2, oversample=1.0,
+                    nb=4, cache=cache, **kw)
+    assert cache.stats()["misses"] == m0
+    assert rep2.compiles_iter1 == 0 and rep2.compiles_warm == 0
+
+
+def test_subsets_clip_to_n_proj(solver_setup):
+    """The ordered-subset view ranges never cover the nb padding."""
+    geom, _, _ = solver_setup
+    plan = plan_reconstruction(geom, "algorithm1_mp", out="device",
+                               nb=8, proj_batch=8, solver="os_sart")
+    assert plan.n_proj == 12
+    subs = plan.subsets
+    assert subs[-1][1] == 12                      # clipped, not padded
+    assert all(s1 > s0 for s0, s1 in subs)
+
+
+def test_solver_plan_validation(solver_setup):
+    geom, _, _ = solver_setup
+    with pytest.raises(ValueError):
+        plan_reconstruction(geom, "algorithm1_mp", solver="sart",
+                            out="host")
+    with pytest.raises(ValueError):
+        plan_reconstruction(geom, "algorithm1_mp", solver="nope",
+                            out="device")
+    with pytest.raises(ValueError):
+        plan_reconstruction(geom, "algorithm1_mp", solver="sart",
+                            out="device", ingest="stream")
+
+
+def test_executor_reuse_and_duck_type(solver_setup):
+    """solver_executor returns the SAME executor for the same request,
+    and the executor exposes the PlanExecutor surface the serving
+    layer's buckets rely on."""
+    geom, _, projs = solver_setup
+    cache = ProgramCache()
+    plan = plan_reconstruction(geom, "algorithm1_mp", out="device",
+                               solver="sart")
+    a = solver_executor(geom, plan, cache, oversample=1.0)
+    b = solver_executor(geom, plan, cache, oversample=1.0)
+    assert a is b
+    assert a.supports_request_batching is False
+    assert a.pipeline in ("sync", "async")
+    assert isinstance(a.fleet_totals, dict)
+    with a._fleet_lock:
+        pass
+    vol = a.reconstruct(projs, n_iters=1, oversample=1.0)
+    assert vol.shape == (16, 16, 16)
+
+
+def test_forward_chunking_parity(solver_setup):
+    """forward_project(proj_batch=) and views= match the single
+    all-views dispatch."""
+    geom, phantom, _ = solver_setup
+    full = forward_project(phantom, geom, oversample=1.0)
+    chunked = forward_project(phantom, geom, oversample=1.0,
+                              proj_batch=5)
+    assert np.allclose(np.asarray(full), np.asarray(chunked), atol=1e-5)
+    sub = forward_project(phantom, geom, oversample=1.0,
+                          views=slice(2, 9))
+    assert np.allclose(np.asarray(full)[2:9], np.asarray(sub), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# service integration
+
+
+def test_service_solver_bucket(solver_setup):
+    """Solver requests form their own bucket family; the second request
+    is a bucket hit that compiles nothing."""
+    from repro.runtime.service import ReconService
+    geom, _, projs = solver_setup
+    with ReconService() as svc:
+        v1 = svc.reconstruct(projs, geom, solver="sart", n_iters=2,
+                             nb=4, oversample=1.0)
+        m1 = svc.cache.stats()["misses"]
+        v2 = svc.reconstruct(projs, geom, solver="sart", n_iters=2,
+                             nb=4, oversample=1.0)
+        assert svc.cache.stats()["misses"] == m1
+        assert np.allclose(np.asarray(v1), np.asarray(v2))
+        vf = svc.reconstruct(projs, geom, nb=4)        # FDK bucket
+        st = svc.stats()
+        assert len(st.buckets) == 2
+        assert vf.shape == v1.shape
+        with pytest.raises(ValueError):
+            svc.reconstruct(projs, geom, n_iters=3)    # knobs need solver=
+
+
+def test_sart_step_facade_delegates(solver_setup):
+    """The legacy one-step façade rides the persistent executor: same
+    fixed point, and the second call compiles nothing."""
+    from repro.core.fdk import sart_step
+    from repro.runtime.executor import default_program_cache
+    geom, _, projs = solver_setup
+    x = jnp.zeros((16, 16, 16), jnp.float32)
+    x1 = sart_step(x, projs, geom, nb=4, oversample=1.0)
+    m0 = default_program_cache().stats()["misses"]
+    x2 = sart_step(x1, projs, geom, nb=4, oversample=1.0)
+    assert default_program_cache().stats()["misses"] == m0
+    # the update moves toward the data
+    r0 = float(jnp.linalg.norm(
+        projs - forward_project(x, geom, oversample=1.0)))
+    r2 = float(jnp.linalg.norm(
+        projs - forward_project(x2, geom, oversample=1.0)))
+    assert r2 < r0
+
+
+# ---------------------------------------------------------------------------
+# solver autotuning
+
+
+def test_autotune_solver_method(solver_setup, tmp_path):
+    """autotune(method=...) measures amortized per-iteration wall and
+    persists a solver-scoped winner (cache hit: zero trials)."""
+    from repro.runtime.autotune import autotune
+    geom, _, projs = solver_setup
+    path = tmp_path / "tuning.json"
+    cfg = autotune(geom, method="sart", budget_s=25.0, iters=2, nb=4,
+                   cache=str(path), projections=projs,
+                   program_cache=ProgramCache())
+    assert cfg.solver == "sart"
+    assert cfg.source == "measured" and cfg.trials >= 1
+    assert cfg.wall_us > 0
+    hit = autotune(geom, method="sart", nb=4, cache=str(path),
+                   projections=projs, program_cache=ProgramCache())
+    assert hit.source == "cache" and hit.trials == 0
+    assert hit.solver == "sart" and hit.precision == cfg.precision
