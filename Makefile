@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 tier1-fast tier1-slow collect-smoke bench-tiled \
 	bench-smoke bench-service bench-autotune bench-fleet bench-stream \
-	bench-solvers test-fleet serve
+	bench-solvers bench-telemetry test-fleet serve trace
 
 tier1:
 	tests/run_tier1.sh
@@ -36,6 +36,9 @@ bench-stream:                  # online ingestion: tail + hidden fraction
 bench-solvers:                 # iterative loops: warm us/iter + bf16 axis
 	$(PY) -m benchmarks.bench_solvers
 
+bench-telemetry:               # overhead guard: disabled spans < 2% wall
+	$(PY) -m benchmarks.bench_telemetry
+
 test-fleet:                    # the multidevice CI lane, locally
 	$(PY) -m pytest -q tests/test_fleet.py tests/test_distributed.py \
 		tests/test_fault_tolerance.py
@@ -43,6 +46,11 @@ test-fleet:                    # the multidevice CI lane, locally
 bench-smoke:                   # perf-trajectory snapshot (non-gating);
 	$(PY) -m benchmarks.bench_smoke --json auto \
 		--diff auto --warn-regress 0.25    # auto = next BENCH_PR<N>.json
+
+trace:                         # Perfetto-loadable trace of a service
+	$(PY) examples/trace_recon.py  # burst (batched + streamed); writes
+# recon_trace.json — open at https://ui.perfetto.dev (docs/ARCHITECTURE.md
+# "Stage 10 — observe" explains the span taxonomy and thread lanes)
 
 serve:                         # documented ReconService entrypoint:
 	scripts/serve_env.sh $(PY) examples/serve_recon.py  # tcmalloc,

@@ -12,8 +12,10 @@ CI uploads as an artifact), the streaming-ingestion overlap numbers
 (``bench_stream`` — last-view-to-volume tail vs offline wall and the
 hidden fraction of a simulated scanner run), the iterative-solver
 loops (``bench_solvers`` — warm amortized per-iteration wall vs the
-compile-heavy first iteration, plus the bf16 precision axis), and a
-bigger-size
+compile-heavy first iteration, plus the bf16 precision axis), the
+telemetry overhead guard (``bench_telemetry`` — asserts disabled-mode
+span overhead stays under 2% of the smoke-recon wall and reports the
+enabled-mode cost), and a bigger-size
 re-measure of the symmetry
 family (the BENCH_PR2 ``symmetry_mp`` 0.48x number was part real
 regression — fixed by the affine-fold mirror in core/backproject.py —
@@ -48,7 +50,7 @@ from repro.core import projection_matrices, standard_geometry, \
 from repro.core.variants import get_variant
 
 from . import bench_autotune, bench_service, bench_solvers, bench_stream, \
-    bench_tiled, bench_variants, common
+    bench_telemetry, bench_tiled, bench_variants, common
 
 # Smoke sizes: big enough that tiling/batching structure is exercised
 # (several tiles, several nb-batches), small enough for a CI stage.
@@ -161,6 +163,8 @@ def main(argv=None) -> None:
     bench_stream.run(**sizes)
     print("# --- iterative solvers (warm amortized per-iteration) ---")
     bench_solvers.run(**sizes)
+    print("# --- telemetry overhead guard (<2% disabled) ---")
+    bench_telemetry.run(**sizes)
     print("# --- symmetry family (realistic size) ---")
     symmetry_recheck(**BIG)
     if args.json:

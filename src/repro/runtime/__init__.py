@@ -9,5 +9,6 @@ from .engine import TiledReconstructor  # noqa: F401
 from .planner import FleetSchedule, StreamSchedule, \
     partition_steps  # noqa: F401
 from .service import ReconService, ServiceStats, StreamSession  # noqa: F401
+from . import telemetry  # noqa: F401
 from .solvers import IterativeExecutor, SolveReport, solve  # noqa: F401
 from .straggler import FleetStragglerBoard, StragglerMonitor  # noqa: F401

@@ -83,6 +83,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.tiling import tile_working_set_bytes
 from repro.core.variants import get_spec
+from repro.runtime import telemetry
 
 _DEFAULT_VARIANT = "algorithm1_mp"
 
@@ -900,8 +901,12 @@ def autotune(geom, variant: str = "auto", *, method: str = "fdk",
 
     def timed(cfg: TunedConfig) -> float:
         if cfg.key not in measured:
-            measured[cfg.key] = _measure(cfg, projections, pcache,
-                                         m_iters=iters, m_warmup=warmup)
+            # one span per *measured* candidate (cache hits are free)
+            with telemetry.span("autotune.candidate", cat="autotune",
+                                variant=cfg.variant, key=repr(cfg.key)):
+                measured[cfg.key] = _measure(cfg, projections, pcache,
+                                             m_iters=iters,
+                                             m_warmup=warmup)
         return measured[cfg.key]
 
     best = base_cfg
@@ -954,4 +959,11 @@ def autotune(geom, variant: str = "auto", *, method: str = "fdk",
         best, wall_us=best_t * 1e6, baseline_us=baseline_t * 1e6,
         source="measured", trials=len(measured), tuned_at=time.time())
     tcache.store(fp, rkey, winner)
+    # tuner-outcome trajectory: one record per full search, keyed by
+    # fingerprint, so the portability claim is a tracked number
+    telemetry.record_tuning({
+        "fingerprint": fp, "bucket_key": rkey,
+        "heuristic_wall": winner.baseline_us,
+        "tuned_wall": winner.wall_us, "ratio": winner.speedup,
+        "tuned_at": winner.tuned_at})
     return winner

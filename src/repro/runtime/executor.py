@@ -71,12 +71,13 @@ from repro.core.filtering import fdk_filter_chunk
 from repro.core.geometry import CTGeometry, projection_matrices
 from repro.core.tiling import (
     TileSpec, make_tiles, pad_projection_batch, plan_proj_chunks,
-    translate_matrices,
+    tile_working_set_bytes, translate_matrices,
 )
 from repro.core.variants import get_spec
+from repro.runtime import telemetry
 from repro.runtime.planner import (
     PlanStep, ReconPlan, StepMajorSchedule, build_step_major,
-    partition_steps, resolve_tile_variant,
+    partition_steps, resolve_tile_variant, step_cost,
 )
 from repro.runtime.straggler import FleetStragglerBoard
 
@@ -151,8 +152,12 @@ class ProgramCache:
             if prog is not None:
                 self.hits += 1
                 return prog
-        # build outside the lock (tracing can be slow); last writer wins
-        prog = builder()
+        # build outside the lock (tracing can be slow); last writer wins.
+        # The span wraps builder() and nothing else, so "compile" span
+        # count == self.misses EXACTLY (both tick once per build, even
+        # when two threads race on the same key).
+        with telemetry.span("compile", cat="compile", key=repr(key)):
+            prog = builder()
         with self._lock:
             self._programs.setdefault(key, prog)
             self.misses += 1
@@ -462,11 +467,12 @@ class _AsyncFlushQueue:
                 if writes is None:
                     return
                 if self._error is None:   # keep consuming after failure
-                    for w in writes:
-                        tgt, sl, piece = (w if len(w) == 3
-                                          else (self._vol, w[0], w[1]))
-                        piece = jax.block_until_ready(piece)
-                        tgt[sl] += np.asarray(piece)
+                    with telemetry.span("flush", n_writes=len(writes)):
+                        for w in writes:
+                            tgt, sl, piece = (w if len(w) == 3
+                                              else (self._vol, w[0], w[1]))
+                            piece = jax.block_until_ready(piece)
+                            tgt[sl] += np.asarray(piece)
             except BaseException as exc:   # surfaced at put()/close()
                 self._error = exc
             finally:
@@ -485,6 +491,27 @@ class _AsyncFlushQueue:
         self._thread.join()
         if self._error is not None:
             raise self._error
+
+
+# 8 fused multiply-adds per voxel-view update — the same
+# "ct-backproject" cost model as launch/roofline.py (model_flops =
+# 8 * vol^3 * n_views), applied per tile step so trace annotations and
+# the capacity model tell one arithmetic-intensity story.
+_FLOPS_PER_UPDATE = 8.0
+
+
+def _step_roofline(plan: ReconPlan, step: PlanStep, n_views: int) -> dict:
+    """Span args for one step dispatch: modeled bytes moved (the
+    planner's tile working-set model, ``core.tiling.
+    tile_working_set_bytes``) and FLOPs (``_FLOPS_PER_UPDATE`` per
+    voxel-view update over :func:`~repro.runtime.planner.step_cost`
+    voxels), plus the resulting arithmetic intensity."""
+    ws = int(tile_working_set_bytes(step.call_shape, plan.det_shape_wh,
+                                    nb=plan.nb))
+    flops = _FLOPS_PER_UPDATE * step_cost(step) * int(n_views)
+    return {"bytes": ws, "flops": flops,
+            "ai_flop_per_byte": round(flops / max(ws, 1), 3),
+            "voxels": int(step_cost(step)), "n_views": int(n_views)}
 
 
 def _pad_mats(mats: jnp.ndarray, n_pad: int) -> jnp.ndarray:
@@ -525,8 +552,10 @@ class _FilteredChunkProducer:
         """Filtered ``(img_c, mat_c)`` of chunk ``c`` (memoized)."""
         if c not in self._memo:
             s0, s1 = self._chunks[c]
-            self._memo[c] = self._ex._chunk_inputs(
-                self._projections, self._mat_p, s0, s1)
+            with telemetry.span("filter.chunk", chunk=c,
+                                n_views=int(s1 - s0)):
+                self._memo[c] = self._ex._chunk_inputs(
+                    self._projections, self._mat_p, s0, s1)
         return self._memo[c]
 
     def prefetch(self, c: int) -> None:
@@ -597,11 +626,13 @@ class FleetConfig:
 
 
 @dataclasses.dataclass(frozen=True)
-class FleetReport:
+class FleetReport(telemetry.EmitMixin):
     """What one ``execute_fleet`` run did: per-device completion counts,
     how many steps migrated (``stolen``), how many re-ran after a
     failure (``retried``), which devices were retired (``dead_devices``)
-    and which the straggler board flagged (``flagged_devices``)."""
+    and which the straggler board flagged (``flagged_devices``).
+    ``as_dict()``/``emit()`` follow the shared
+    :class:`~repro.runtime.telemetry.EmitMixin` report contract."""
 
     n_devices: int
     n_steps: int
@@ -838,6 +869,16 @@ class PlanExecutor:
             return _AsyncFlushQueue(vol, depth=self.pipeline_depth)
         return None
 
+    def _step_span(self, step: PlanStep, n_views: int, **extra):
+        """Telemetry span for one step dispatch, roofline-annotated
+        (bytes / FLOPs / arithmetic intensity — the args are only
+        computed when tracing is live)."""
+        sp = telemetry.span("step.dispatch", xla=True)
+        if sp.live:
+            sp.set(variant=step.variant, call_shape=list(step.call_shape),
+                   **_step_roofline(self.plan, step, n_views), **extra)
+        return sp
+
     def _backproject_chunk(self, vol, img_c: jnp.ndarray,
                            mat_c: jnp.ndarray,
                            flush: Optional[_AsyncFlushQueue] = None):
@@ -851,9 +892,11 @@ class PlanExecutor:
         plan = self.plan
         host = plan.out == "host"
         pending = ()   # previous step's (slices, device piece) writes
+        n_views = int(img_c.shape[0])
         for step in plan.steps:
             prog = self._program(step.variant, step.call_shape)
-            out = prog(img_c, self._translated(mat_c, step))
+            with self._step_span(step, n_views, schedule="chunk"):
+                out = prog(img_c, self._translated(mat_c, step))
             cur = self._step_writes(step, out)
             if not host:
                 for (i_s, j_s, k_s), piece in cur:
@@ -895,7 +938,9 @@ class PlanExecutor:
                     step = work.step
                     prog = self._scan_program(step.variant, step.call_shape,
                                               sched)
-                    out = prog(img_s, self._translated(mat_s, step))
+                    with self._step_span(step, sched.n_chunks *
+                                         sched.chunk_size, schedule="step"):
+                        out = prog(img_s, self._translated(mat_s, step))
                     flush.put(self._step_writes(step, out))
             finally:
                 flush.close()
@@ -904,7 +949,9 @@ class PlanExecutor:
         for work in sched.steps:
             step = work.step
             prog = self._scan_program(step.variant, step.call_shape, sched)
-            out = prog(img_s, self._translated(mat_s, step))
+            with self._step_span(step, sched.n_chunks * sched.chunk_size,
+                                 schedule="step"):
+                out = prog(img_s, self._translated(mat_s, step))
             cur = self._step_writes(step, out)
             if host:
                 for sl, piece in pending:
@@ -951,7 +998,10 @@ class PlanExecutor:
                     step = work.step
                     prog = self._batch_scan_program(
                         step.variant, step.call_shape, sched, rb)
-                    out = prog(img_b, self._translated(mat_s, step))
+                    with self._step_span(step, sched.n_chunks *
+                                         sched.chunk_size, schedule="step",
+                                         rb=rb):
+                        out = prog(img_b, self._translated(mat_s, step))
                     flush.put(fanout(step, out))
             finally:
                 flush.close()
@@ -961,7 +1011,9 @@ class PlanExecutor:
             step = work.step
             prog = self._batch_scan_program(step.variant, step.call_shape,
                                             sched, rb)
-            out = prog(img_b, self._translated(mat_s, step))
+            with self._step_span(step, sched.n_chunks * sched.chunk_size,
+                                 schedule="step", rb=rb):
+                out = prog(img_b, self._translated(mat_s, step))
             if host:
                 for tgt, sl, piece in pending:
                     tgt[sl] += np.asarray(piece)
@@ -1055,6 +1107,7 @@ class PlanExecutor:
             victims.sort(key=lambda v: (v not in flagged,
                                         -len(deques[v]), v))
             counts["stolen"] += 1
+            telemetry.instant("fleet.steal", thief=d, victim=victims[0])
             return deques[victims[0]].pop()
 
         def worker(d: int) -> None:
@@ -1093,7 +1146,11 @@ class PlanExecutor:
                     origin = jax.device_put(
                         jnp.asarray([step.i0, step.j0, step.k_off],
                                     jnp.float32), dev)
-                    out = jax.block_until_ready(prog(img_d, mat_d, origin))
+                    with self._step_span(step, sched.n_chunks *
+                                         sched.chunk_size, schedule="fleet",
+                                         device=d, step_index=idx):
+                        out = jax.block_until_ready(
+                            prog(img_d, mat_d, origin))
                 except Exception as exc:  # noqa: BLE001 — any step fault
                     with cond:
                         counts["outstanding"] -= 1
@@ -1104,8 +1161,13 @@ class PlanExecutor:
                         else:
                             retry.append(idx)
                             counts["retried"] += 1
+                            telemetry.instant("fleet.failover", device=d,
+                                              step_index=idx,
+                                              retries=failures[idx])
                         if strikes[d] >= cfg.device_strikes:
                             dead.add(d)
+                            telemetry.instant("fleet.retire", device=d,
+                                              strikes=strikes[d])
                         cond.notify_all()
                     if fatal or d in dead:
                         return
@@ -1191,8 +1253,11 @@ class PlanExecutor:
                                           sched)
             if self._single_full_call() and plan.out == "device":
                 step = plan.steps[0]
-                return self._scan_program(step.variant, step.call_shape,
-                                          sched)(img_s, mat_s)
+                prog = self._scan_program(step.variant, step.call_shape,
+                                          sched)
+                with self._step_span(step, sched.n_chunks *
+                                     sched.chunk_size, schedule="step"):
+                    return prog(img_s, mat_s)
             return self._execute_step_major(self._alloc(), img_s, mat_s,
                                             sched)
         if self._single_full_call() and plan.out == "device":
@@ -1200,7 +1265,8 @@ class PlanExecutor:
             prog = self._program(step.variant, step.call_shape)
             acc = None
             for s0, s1 in chunks:
-                part = prog(img_p[s0:s1], mat_p[s0:s1])
+                with self._step_span(step, int(s1 - s0), schedule="chunk"):
+                    part = prog(img_p[s0:s1], mat_p[s0:s1])
                 acc = part if acc is None else acc + part
             return acc
         vol = self._alloc()
@@ -1284,8 +1350,11 @@ class PlanExecutor:
                 return np.transpose(vol, (2, 1, 0))
             if self._single_full_call() and plan.out == "device":
                 step = plan.steps[0]
-                acc = self._scan_program(step.variant, step.call_shape,
-                                         sched)(img_s, mat_s)
+                prog = self._scan_program(step.variant, step.call_shape,
+                                          sched)
+                with self._step_span(step, sched.n_chunks *
+                                     sched.chunk_size, schedule="step"):
+                    acc = prog(img_s, mat_s)
                 return bp.volume_to_native(acc)
             vol = self._execute_step_major(self._alloc(), img_s, mat_s,
                                            sched)
@@ -1296,7 +1365,9 @@ class PlanExecutor:
             for c in range(len(plan.chunks)):
                 img_c, mat_c = producer.get(c)
                 producer.prefetch(c + 1)   # overlaps this chunk's compute
-                part = prog(img_c, mat_c)
+                with self._step_span(step, int(img_c.shape[0]),
+                                     schedule="chunk"):
+                    part = prog(img_c, mat_c)
                 acc = part if acc is None else acc + part
                 producer.drop(c)
             return bp.volume_to_native(acc)
@@ -1392,8 +1463,11 @@ class PlanExecutor:
             return [np.transpose(v, (2, 1, 0)) for v in vols]
         if self._single_full_call() and plan.out == "device":
             step = plan.steps[0]
-            acc = self._batch_scan_program(
-                step.variant, step.call_shape, sched, k)(img_b, mat_s)
+            prog = self._batch_scan_program(step.variant, step.call_shape,
+                                            sched, k)
+            with self._step_span(step, sched.n_chunks * sched.chunk_size,
+                                 schedule="step", rb=k):
+                acc = prog(img_b, mat_s)
             return [bp.volume_to_native(acc[r]) for r in range(k)]
         vols = self._execute_step_major_batch(
             [self._alloc() for _ in range(k)], img_b, mat_s, sched)
@@ -1466,7 +1540,7 @@ class PlanExecutor:
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class StreamReport:
+class StreamReport(telemetry.EmitMixin):
     """What one closed stream did, in overlap terms.
 
     ``acquire_s`` is first-view to last-view arrival wall (the simulated
@@ -1637,6 +1711,8 @@ class StreamingExecutor:
                     self._admit_ready(c)
             self._next_row = max(self._next_row, first + k)
             self._t_last = time.perf_counter()
+            telemetry.instant("stream.push", first=first, k=k,
+                              rows=self._rows)
             self._cond.notify_all()
 
     def _admit_ready(self, c: int) -> None:
@@ -1747,13 +1823,14 @@ class StreamingExecutor:
         lane; the service's batched path drives ``filtered`` /
         ``accept_part`` / ``chunk_done`` itself)."""
         t0 = time.perf_counter()
-        img_c, mat_c = self.filtered(c)
-        self.prefilter(c + 1)   # overlap next chunk's filtering
-        ex = self._ex
-        for i, step in enumerate(self._plan.steps):
-            prog = ex._program(step.variant, step.call_shape)
-            self.accept_part(i, prog(img_c, ex._translated(mat_c, step)))
-        self.chunk_done(c)
+        with telemetry.span("stream.fold", chunk=c):
+            img_c, mat_c = self.filtered(c)
+            self.prefilter(c + 1)   # overlap next chunk's filtering
+            ex = self._ex
+            for i, step in enumerate(self._plan.steps):
+                prog = ex._program(step.variant, step.call_shape)
+                self.accept_part(i, prog(img_c, ex._translated(mat_c, step)))
+            self.chunk_done(c)
         self.add_busy(time.perf_counter() - t0)
 
     def chunk_done(self, c: int) -> None:
@@ -1778,6 +1855,10 @@ class StreamingExecutor:
         placement primitives (and float-op order) as the offline
         chunk-major walk, ending in one host add per write into the
         zeroed volume."""
+        with telemetry.span("stream.tail", n_chunks=self._n_chunks):
+            self._finish_inner()
+
+    def _finish_inner(self) -> None:
         ex = self._ex
         plan = self._plan
         if plan.out == "device":

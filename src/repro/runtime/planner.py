@@ -43,6 +43,7 @@ without touching arrays (tests/test_planner.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.geometry import CTGeometry
@@ -51,6 +52,7 @@ from repro.core.tiling import (
     plan_z_units, tile_working_set_bytes,
 )
 from repro.core.variants import KernelSpec, get_spec
+from repro.runtime import telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -479,7 +481,8 @@ def _plan_steps(vol_shape_xyz: Tuple[int, int, int],
     return tuple(steps)
 
 
-def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
+def _plan_reconstruction_impl(geom: CTGeometry,
+                        variant: str = "algorithm1_mp", *,
                         tile_shape: Optional[Sequence[int]] = None,
                         memory_budget: Optional[int] = None,
                         nb: int = 8,
@@ -672,3 +675,19 @@ def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp", *,
             f"{int(memory_budget)} B — drop one of the two or enlarge "
             f"the budget")
     return plan
+
+
+@functools.wraps(_plan_reconstruction_impl)
+def plan_reconstruction(geom: CTGeometry, variant: str = "algorithm1_mp",
+                        **kwargs) -> ReconPlan:
+    # Telemetry seam: every plan build (heuristic or tuning-lookup —
+    # the lookup path re-enters here for its heuristic fallback, which
+    # nests a second span) is one "plan.build" span. All knobs beyond
+    # ``variant`` are keyword-only in the impl, so the pass-through
+    # signature is lossless; @wraps keeps the docstring + introspection.
+    with telemetry.span("plan.build", variant=str(variant)):
+        return _plan_reconstruction_impl(geom, variant, **kwargs)
+
+
+plan_reconstruction.__name__ = "plan_reconstruction"
+plan_reconstruction.__qualname__ = "plan_reconstruction"

@@ -91,7 +91,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import math
 import threading
 import time
 from concurrent.futures import Future
@@ -101,6 +100,7 @@ import jax.numpy as jnp
 
 from repro.core.fdk import _build_plan
 from repro.core.geometry import CTGeometry
+from repro.runtime import telemetry
 from repro.runtime.executor import FleetConfig, PlanExecutor, \
     ProgramCache, as_fleet_config, default_program_cache
 from repro.runtime.planner import ReconPlan
@@ -110,71 +110,10 @@ from repro.runtime.planner import ReconPlan
 # Streamed latency accounting
 # --------------------------------------------------------------------------
 
-class LatencyHistogram:
-    """Streamed log-2 latency histogram (per bucket, O(1) memory).
-
-    Every completed request is recorded as it finishes — the histogram
-    IS the stream, not a poll-time sample — into geometric bins
-    ``[BASE_S * 2**i, BASE_S * 2**(i+1))``. Quantiles are read from the
-    cumulative counts with the bin's geometric center as the estimate
-    (resolution ~±41%, the standard trade for a fixed-size streamed
-    histogram). Thread-safe: workers record concurrently.
-    """
-
-    BASE_S = 50e-6          # bin 0 also absorbs anything faster
-    NBINS = 40              # 50 µs .. ~15 hours
-
-    def __init__(self):
-        self._counts = [0] * self.NBINS
-        self._count = 0
-        self._total_s = 0.0
-        self._lock = threading.Lock()
-
-    def record(self, seconds: float) -> None:
-        s = max(float(seconds), 0.0)
-        b = 0 if s < 2 * self.BASE_S else min(
-            self.NBINS - 1, int(math.log2(s / self.BASE_S)))
-        with self._lock:
-            self._counts[b] += 1
-            self._count += 1
-            self._total_s += s
-
-    @property
-    def count(self) -> int:
-        with self._lock:
-            return self._count
-
-    def counts(self) -> List[int]:
-        with self._lock:
-            return list(self._counts)
-
-    def mean(self) -> Optional[float]:
-        with self._lock:
-            return self._total_s / self._count if self._count else None
-
-    def quantile(self, q: float) -> Optional[float]:
-        """Approximate q-quantile in seconds (None while empty)."""
-        with self._lock:
-            if not self._count:
-                return None
-            target = max(1.0, q * self._count)
-            cum = 0
-            for i, c in enumerate(self._counts):
-                cum += c
-                if cum >= target:
-                    return self.BASE_S * (2.0 ** i) * math.sqrt(2.0)
-            return self.BASE_S * (2.0 ** (self.NBINS - 1))
-
-    @staticmethod
-    def merged(hists: Iterable["LatencyHistogram"]) -> "LatencyHistogram":
-        out = LatencyHistogram()
-        for h in hists:
-            with h._lock:
-                for i, c in enumerate(h._counts):
-                    out._counts[i] += c
-                out._count += h._count
-                out._total_s += h._total_s
-        return out
+# The streamed log-2 latency histogram was absorbed into the telemetry
+# metrics registry (runtime/telemetry.py — one histogram type for the
+# whole runtime); the serving-layer name survives as an alias.
+LatencyHistogram = telemetry.Histogram
 
 
 # --------------------------------------------------------------------------
@@ -182,7 +121,7 @@ class LatencyHistogram:
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class BucketStats:
+class BucketStats(telemetry.EmitMixin):
     """One shape bucket's counters at snapshot time.
 
     ``misses`` is 1 for every live bucket (its creation); ``hits`` are
@@ -248,11 +187,14 @@ class BucketStats:
 
 
 @dataclasses.dataclass(frozen=True)
-class ServiceStats:
+class ServiceStats(telemetry.EmitMixin):
     """Whole-service snapshot: totals + per-bucket rows + cache stats.
 
     ``p50_ms``/``p99_ms`` aggregate the per-bucket streamed histograms
-    (merged bin counts, not an average of quantiles)."""
+    (merged bin counts, not an average of quantiles). ``as_dict()`` /
+    ``emit()`` follow the shared telemetry report contract;
+    :meth:`export_prometheus` renders the snapshot as Prometheus text
+    exposition for a scrape endpoint."""
 
     requests: int
     bucket_hits: int
@@ -279,6 +221,79 @@ class ServiceStats:
     def hit_rate(self) -> float:
         total = self.bucket_hits + self.bucket_misses
         return self.bucket_hits / total if total else 0.0
+
+    def export_prometheus(self) -> str:
+        """This snapshot as Prometheus text exposition (version 0.0.4).
+
+        Service totals are unlabeled samples; per-bucket rows carry
+        ``{variant, schedule, source, vol, n_proj}`` labels (together
+        unique per bucket). Empty quantiles render as NaN — present but
+        unobserved, the exposition-format convention.
+        """
+        rows = [
+            ("repro_requests_total", "counter",
+             "requests admitted via submit()", [({}, self.requests)]),
+            ("repro_bucket_hits_total", "counter",
+             "requests that reused a live bucket",
+             [({}, self.bucket_hits)]),
+            ("repro_bucket_misses_total", "counter",
+             "buckets created", [({}, self.bucket_misses)]),
+            ("repro_hit_rate", "gauge", "bucket hit rate",
+             [({}, self.hit_rate)]),
+            ("repro_queued", "gauge", "requests waiting in the former",
+             [({}, self.queued)]),
+            ("repro_dispatches_total", "counter",
+             "executor dispatches (a formed batch is one)",
+             [({}, self.dispatches)]),
+            ("repro_mean_occupancy", "gauge",
+             "completed requests per dispatch",
+             [({}, self.mean_occupancy)]),
+            ("repro_latency_p50_ms", "gauge",
+             "request latency p50 (merged streamed histograms)",
+             [({}, self.p50_ms)]),
+            ("repro_latency_p99_ms", "gauge",
+             "request latency p99 (merged streamed histograms)",
+             [({}, self.p99_ms)]),
+            ("repro_streams_total", "counter",
+             "streaming sessions opened", [({}, self.streams)]),
+            ("repro_stream_tail_ms", "gauge",
+             "mean last-view-to-volume tail over closed sessions",
+             [({}, self.stream_tail_ms)]),
+            ("repro_stream_hidden_fraction", "gauge",
+             "mean fold wall hidden behind acquisition",
+             [({}, self.stream_hidden_fraction)]),
+            ("repro_program_cache_hits_total", "counter",
+             "jit-program cache hits", [({}, self.cache.get("hits", 0))]),
+            ("repro_program_cache_misses_total", "counter",
+             "jit-program cache misses (== programs built)",
+             [({}, self.cache.get("misses", 0))]),
+        ]
+
+        def lab(b: "BucketStats") -> Dict[str, object]:
+            return {"variant": b.variant, "schedule": b.schedule,
+                    "source": b.source,
+                    "vol": "x".join(str(v) for v in b.vol_shape_xyz),
+                    "n_proj": b.n_proj}
+
+        bs = self.buckets
+        rows += [
+            ("repro_bucket_requests", "counter",
+             "per-bucket requests", [(lab(b), b.requests) for b in bs]),
+            ("repro_bucket_completed", "counter",
+             "per-bucket completed requests",
+             [(lab(b), b.completed) for b in bs]),
+            ("repro_bucket_dispatches", "counter",
+             "per-bucket executor dispatches",
+             [(lab(b), b.dispatches) for b in bs]),
+            ("repro_bucket_p50_ms", "gauge", "per-bucket latency p50",
+             [(lab(b), b.p50_ms) for b in bs]),
+            ("repro_bucket_p99_ms", "gauge", "per-bucket latency p99",
+             [(lab(b), b.p99_ms) for b in bs]),
+            ("repro_bucket_programs_built", "counter",
+             "programs compiled by this bucket's warm-up",
+             [(lab(b), b.programs_built) for b in bs]),
+        ]
+        return telemetry.prom_render(rows)
 
 
 def _ms(seconds: Optional[float]) -> Optional[float]:
@@ -307,6 +322,10 @@ class _Request:
     # iterative-request knobs (n_iters/relax/...), forwarded to the
     # bucket's IterativeExecutor; None for plain FDK requests
     solver_kw: Optional[Dict] = None
+    # per-request telemetry identity (telemetry.new_trace_id): carried
+    # into the worker's dispatch span so a k-wide batched dispatch
+    # links back to all k request traces
+    trace_id: str = ""
 
 
 @dataclasses.dataclass
@@ -423,20 +442,26 @@ class _BatchFormer:
                 if self._closed:
                     return None
                 self._cond.wait(0.05)
-            batch = [self._dq.popleft()]
-            cap = max(1, int(self._cap_fn(batch[0])))
-            self._gather(batch, cap)
-            if len(batch) >= cap or self.max_wait_s <= 0.0:
-                return batch
-            t0 = time.perf_counter()
-            while len(batch) < cap and not self._closed:
-                now = time.perf_counter()
-                limit = self._wait_limit(batch, t0)
-                if now >= limit:
-                    break
-                self._cond.wait(min(0.01, limit - now))
+            # the forming window is a span (not the idle head wait):
+            # its duration is the wait-for-peers cost and its args the
+            # realized occupancy — the coalescing trade made visible
+            with telemetry.span("batch.form") as sp:
+                batch = [self._dq.popleft()]
+                cap = max(1, int(self._cap_fn(batch[0])))
                 self._gather(batch, cap)
-            return batch
+                if len(batch) >= cap or self.max_wait_s <= 0.0:
+                    sp.set(k=len(batch), cap=cap, waited=False)
+                    return batch
+                t0 = time.perf_counter()
+                while len(batch) < cap and not self._closed:
+                    now = time.perf_counter()
+                    limit = self._wait_limit(batch, t0)
+                    if now >= limit:
+                        break
+                    self._cond.wait(min(0.01, limit - now))
+                    self._gather(batch, cap)
+                sp.set(k=len(batch), cap=cap, waited=True)
+                return batch
 
 
 class _Bucket:
@@ -856,13 +881,20 @@ class ReconService:
         if deadline_ms is not None and deadline_ms < 0:
             raise ValueError(
                 f"deadline_ms must be >= 0, got {deadline_ms}")
+        with telemetry.span("plan.bucket_key"):
+            key = (geom, plan.bucket_key)
+        trace_id = telemetry.new_trace_id()
+        telemetry.instant("request.submit", trace_id=trace_id,
+                          variant=plan.variant, priority=int(priority))
         fut: Future = Future()
+        fut.trace_id = trace_id      # exposed to the caller for linkage
         req = _Request(
             fut=fut, projections=projections, geom=geom, plan=plan,
-            config=config, key=(geom, plan.bucket_key),
+            config=config, key=key,
             deadline_s=(None if deadline_ms is None
                         else time.perf_counter() + deadline_ms / 1e3),
-            priority=int(priority), solver_kw=solver_kw)
+            priority=int(priority), solver_kw=solver_kw,
+            trace_id=trace_id)
         # put() checks closed under the former's condition, so a
         # request either raises here or is guaranteed a consumer
         # (workers drain the queue to empty before honoring close)
@@ -891,21 +923,28 @@ class ReconService:
                 with self._lock:
                     bucket.requests += k
                 t0 = time.perf_counter()
-                if k == 1:
-                    results = [bucket.executor.reconstruct(
-                        head.projections, **(head.solver_kw or {}))]
-                elif bucket.executor.supports_request_batching:
-                    # ONE dispatch stream serves all k lanes —
-                    # bit-identical per lane to the k==1 path
-                    results = bucket.executor.execute_batch(
-                        [r.projections for r in live])
-                else:
-                    # chunk-major and solver buckets can't batch: the
-                    # formed group still runs back-to-back on one
-                    # worker (each solve keeps its own request knobs)
-                    results = [bucket.executor.reconstruct(
-                        r.projections, **(r.solver_kw or {}))
-                               for r in live]
+                # the dispatch span carries EVERY member's trace id —
+                # the k-wide batched dispatch links back to all k
+                # request traces (request.submit instants)
+                with telemetry.span(
+                        "service.dispatch", k=k,
+                        variant=bucket.plan.variant,
+                        trace_ids=[r.trace_id for r in live]):
+                    if k == 1:
+                        results = [bucket.executor.reconstruct(
+                            head.projections, **(head.solver_kw or {}))]
+                    elif bucket.executor.supports_request_batching:
+                        # ONE dispatch stream serves all k lanes —
+                        # bit-identical per lane to the k==1 path
+                        results = bucket.executor.execute_batch(
+                            [r.projections for r in live])
+                    else:
+                        # chunk-major and solver buckets can't batch: the
+                        # formed group still runs back-to-back on one
+                        # worker (each solve keeps its own request knobs)
+                        results = [bucket.executor.reconstruct(
+                            r.projections, **(r.solver_kw or {}))
+                                   for r in live]
                 wall = time.perf_counter() - t0
                 # streamed accounting: every member's service time IS
                 # the batch wall (they complete together); the batch
@@ -1024,6 +1063,16 @@ class ReconService:
         c = works[0].chunk
         bucket = works[0].session._bucket
         cores = [w.session._core for w in works]
+        with telemetry.span("service.stream_dispatch", chunk=c,
+                            k=len(cores),
+                            trace_ids=[w.session.trace_id
+                                       for w in works]):
+            self._fold_stream_chunk_inner(c, bucket, cores)
+        with self._lock:
+            bucket.stream_dispatches += 1
+            bucket.stream_lanes += len(cores)
+
+    def _fold_stream_chunk_inner(self, c, bucket, cores) -> None:
         if len(cores) == 1:
             cores[0].fold(c)
         else:
@@ -1047,9 +1096,6 @@ class ReconService:
             for core in cores:
                 core.chunk_done(c)
                 core.add_busy(wall)
-        with self._lock:
-            bucket.stream_dispatches += 1
-            bucket.stream_lanes += len(cores)
 
     # ---- lifecycle / introspection ---------------------------------------
 
@@ -1128,6 +1174,12 @@ class StreamSession:
         self._bucket = bucket
         self._priority = int(priority)
         self._key_base = (bucket.geom, bucket.plan.bucket_key)
+        # per-session trace identity: carried by every batched chunk
+        # dispatch this session participates in (service.stream_dispatch
+        # spans), the stream twin of _Request.trace_id
+        self.trace_id = telemetry.new_trace_id("stream")
+        telemetry.instant("stream.open", trace_id=self.trace_id,
+                          variant=bucket.plan.variant)
         self._core = bucket.executor.open_stream(
             max_pending_chunks=max_pending_chunks, on_ready=self._ready)
 

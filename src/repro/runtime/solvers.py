@@ -56,6 +56,8 @@ from repro.core.geometry import CTGeometry, projection_matrices
 from .executor import PlanExecutor, ProgramCache, default_program_cache
 from .planner import ReconPlan, plan_reconstruction
 
+from repro.runtime import telemetry
+
 SOLVERS = ("sart", "os_sart", "cgls", "fista_tv")
 
 _EPS_RAY = 1e-3     # floor for FP(1) ray lengths (matches sart_step)
@@ -67,8 +69,11 @@ _EPS_VOL = 1e-12    # floor for BP(1) voxel sums
 
 
 @dataclass
-class SolveReport:
-    """What one solve did: convergence trace + compile accounting."""
+class SolveReport(telemetry.EmitMixin):
+    """What one solve did: convergence trace + compile accounting.
+
+    ``EmitMixin`` gives it the shared ``as_dict()``/``emit()`` contract
+    the other runtime reports (service/fleet/stream) use."""
 
     method: str
     n_iters: int
@@ -363,8 +368,10 @@ class IterativeExecutor:
                   else int(tv_inner),
                   oversample=self.oversample if oversample is None
                   else float(oversample))
-        x, residuals, extras = loops[method](projections, x, kw, marks)
-        x = jax.block_until_ready(x)
+        with telemetry.span("solve", method=method, n_iters=n_iters,
+                            precision=self.plan.precision):
+            x, residuals, extras = loops[method](projections, x, kw, marks)
+            x = jax.block_until_ready(x)
         wall = time.perf_counter() - t0
         stats1 = self.cache.stats()["misses"]
         after_iter1 = marks.get("after_iter1", stats1)
@@ -386,12 +393,13 @@ class IterativeExecutor:
         norm = self._bp_ones_for(None, None)
         residuals = []
         for i in range(kw["n_iters"]):
-            est = self._fp(x, oversample=ov)
-            resid = proj - est
-            residuals.append(float(jnp.linalg.norm(resid)))
-            x = x + kw["relax"] * self._bp(resid / ray_len) / norm
-            if i == 0:
-                marks["after_iter1"] = self.cache.stats()["misses"]
+            with telemetry.span("solve.iter", method="sart", i=i):
+                est = self._fp(x, oversample=ov)
+                resid = proj - est
+                residuals.append(float(jnp.linalg.norm(resid)))
+                x = x + kw["relax"] * self._bp(resid / ray_len) / norm
+                if i == 0:
+                    marks["after_iter1"] = self.cache.stats()["misses"]
         return x, residuals, {}
 
     def _solve_os_sart(self, proj, x, kw, marks):
@@ -403,16 +411,17 @@ class IterativeExecutor:
         subsets = self.plan.subsets
         residuals = []
         for i in range(kw["n_iters"]):
-            sweep_sq = 0.0
-            for s0, s1 in subsets:
-                est = self._fp(x, s0, s1, oversample=ov)
-                resid = proj[s0:s1] - est
-                sweep_sq += float(jnp.sum(resid * resid))
-                upd = self._bp(resid / ray_len[s0:s1], s0, s1)
-                x = x + kw["relax"] * upd / self._bp_ones_for(s0, s1)
-            residuals.append(math.sqrt(sweep_sq))
-            if i == 0:
-                marks["after_iter1"] = self.cache.stats()["misses"]
+            with telemetry.span("solve.iter", method="os_sart", i=i):
+                sweep_sq = 0.0
+                for s0, s1 in subsets:
+                    est = self._fp(x, s0, s1, oversample=ov)
+                    resid = proj[s0:s1] - est
+                    sweep_sq += float(jnp.sum(resid * resid))
+                    upd = self._bp(resid / ray_len[s0:s1], s0, s1)
+                    x = x + kw["relax"] * upd / self._bp_ones_for(s0, s1)
+                residuals.append(math.sqrt(sweep_sq))
+                if i == 0:
+                    marks["after_iter1"] = self.cache.stats()["misses"]
         return x, residuals, {"subsets": float(len(subsets))}
 
     def _solve_cgls(self, proj, x, kw, marks):
@@ -433,17 +442,19 @@ class IterativeExecutor:
         gamma = jnp.sum(s * s)
         residuals = []
         for i in range(kw["n_iters"]):
-            q = self._fp(p, oversample=ov)
-            alpha = jnp.sum(r * q) / jnp.maximum(jnp.sum(q * q), _EPS_VOL)
-            x = x + alpha * p
-            r = r - alpha * q
-            residuals.append(float(jnp.linalg.norm(r)))
-            s = self._bp(r)
-            gamma_new = jnp.sum(s * s)
-            p = s + (gamma_new / jnp.maximum(gamma, _EPS_VOL)) * p
-            gamma = gamma_new
-            if i == 0:
-                marks["after_iter1"] = self.cache.stats()["misses"]
+            with telemetry.span("solve.iter", method="cgls", i=i):
+                q = self._fp(p, oversample=ov)
+                alpha = jnp.sum(r * q) / jnp.maximum(jnp.sum(q * q),
+                                                    _EPS_VOL)
+                x = x + alpha * p
+                r = r - alpha * q
+                residuals.append(float(jnp.linalg.norm(r)))
+                s = self._bp(r)
+                gamma_new = jnp.sum(s * s)
+                p = s + (gamma_new / jnp.maximum(gamma, _EPS_VOL)) * p
+                gamma = gamma_new
+                if i == 0:
+                    marks["after_iter1"] = self.cache.stats()["misses"]
         return x, residuals, {}
 
     def _solve_fista_tv(self, proj, x, kw, marks):
@@ -474,14 +485,15 @@ class IterativeExecutor:
         y, t = x, 1.0
         residuals = []
         for i in range(kw["n_iters"]):
-            resid = self._fp(y, oversample=ov) - proj
-            residuals.append(float(jnp.linalg.norm(resid)))
-            x_new = prox(y - step * self._bp(resid), lam)
-            t_new = 0.5 * (1.0 + math.sqrt(1.0 + 4.0 * t * t))
-            y = x_new + ((t - 1.0) / t_new) * (x_new - x)
-            x, t = x_new, t_new
-            if i == 0:
-                marks["after_iter1"] = self.cache.stats()["misses"]
+            with telemetry.span("solve.iter", method="fista_tv", i=i):
+                resid = self._fp(y, oversample=ov) - proj
+                residuals.append(float(jnp.linalg.norm(resid)))
+                x_new = prox(y - step * self._bp(resid), lam)
+                t_new = 0.5 * (1.0 + math.sqrt(1.0 + 4.0 * t * t))
+                y = x_new + ((t - 1.0) / t_new) * (x_new - x)
+                x, t = x_new, t_new
+                if i == 0:
+                    marks["after_iter1"] = self.cache.stats()["misses"]
         return x, residuals, {"lipschitz": L}
 
 

@@ -49,6 +49,10 @@ echo "== tier-1 stage 3/3: perf smoke + trajectory diff (non-gating) =="
 # here (gitignored; CI uploads it as an artifact) so the gate never
 # touches ~/.cache.
 export REPRO_TUNING_CACHE="${REPRO_TUNING_CACHE:-tuning_cache.json}"
+# Tuner-outcome trajectory: every full autotune search appends a
+# {fingerprint, bucket_key, heuristic_wall, tuned_wall, ratio, tuned_at}
+# record here (CI uploads it — the portability claim as a tracked number).
+export REPRO_TUNE_TRAJECTORY="${REPRO_TUNE_TRAJECTORY:-TUNE_TRAJECTORY.json}"
 if [[ "${TIER1_STRICT:-0}" == "1" ]]; then
     python -m benchmarks.bench_smoke --json auto \
         --diff auto --warn-regress 0.25 --strict
